@@ -1,0 +1,52 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+DOC = """Reproduce the EXPERIMENTS.md §Perf hillclimb measurements: the three
+assigned cells, paper-faithful baseline vs beyond-paper optimized.
+
+  PYTHONPATH=src python -m benchmarks.perf_cells [--out results/perf_cells.json]
+"""
+
+import argparse
+import json
+import sys
+
+from benchmarks.roofline import analyze_cell
+
+CELLS = [
+    # (arch, shape, label, overrides)
+    ("minitron-4b", "train_4k", "baseline", {}),
+    ("minitron-4b", "train_4k", "opt:sp-attention",
+     {"attn_seq_shard": True, "seq_shard_acts": True}),
+    ("qwen3-moe-235b-a22b", "train_4k", "baseline", {}),
+    ("qwen3-moe-235b-a22b", "train_4k", "opt:ep-moe",
+     {"moe_impl": "ep", "moe_capacity": 1.25}),
+    ("command-r-plus-104b", "train_4k", "baseline", {}),
+    ("command-r-plus-104b", "train_4k", "opt:no-sp-regathers",
+     {"seq_shard_acts": False}),
+    # bonus serving cells
+    ("falcon-mamba-7b", "decode_32k", "baseline", {}),
+    ("falcon-mamba-7b", "decode_32k", "opt:tp-only-weights",
+     {"serve_weights_fsdp": False}),
+]
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=DOC)
+    p.add_argument("--out", default=None)
+    args = p.parse_args(argv)
+    records = []
+    for arch, shape, label, overrides in CELLS:
+        rec = analyze_cell(arch, shape, overrides=overrides)
+        rec["variant"] = label
+        rec["overrides"] = overrides
+        records.append(rec)
+    if args.out:
+        json.dump(records, open(args.out, "w"), indent=1)
+        print(f"[perf_cells] wrote {len(records)} -> {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,62 @@
+"""Render results/*.json into the EXPERIMENTS.md markdown tables.
+
+  PYTHONPATH=src python -m benchmarks.report
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def dryrun_table(path="results/dryrun_cells.json"):
+    recs = json.load(open(path))
+    out = ["| arch | shape | mesh | status | µb | temp GB/dev | args GB/dev "
+           "| collectives MB/dev (loop bodies once) |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        mem = r.get("memory", {})
+        coll = r.get("collective_bytes_per_device", {})
+        status = r.get("status", "?")
+        if status != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"{status} | | | | |")
+            continue
+        cstr = " ".join(f"{k.split('-')[0]}:{v/1e6:.0f}"
+                        for k, v in sorted(coll.items()))
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+            f"{r.get('microbatches','-')} | "
+            f"{mem.get('temp_size_in_bytes',0)/1e9:.2f} | "
+            f"{mem.get('argument_size_in_bytes',0)/1e9:.2f} | {cstr} |")
+    return "\n".join(out)
+
+
+def roofline_table(path="results/roofline_baseline.json"):
+    recs = json.load(open(path))
+    out = ["| arch | shape | compute s | memory s | collective s | dominant "
+           "| MODEL/HLO flops | roofline frac |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("status") != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | "
+                       f"{r.get('status','?')} | | | | | |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+            f"{r['dominant']} | {r['useful_ratio']:.3f} | "
+            f"{r['roofline_fraction']:.3f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "dryrun"):
+        print("## Dry-run cells\n")
+        print(dryrun_table())
+    if which in ("all", "roofline"):
+        print("\n## Roofline\n")
+        try:
+            print(roofline_table())
+        except FileNotFoundError:
+            print("(roofline_baseline.json not present yet)")

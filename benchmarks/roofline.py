@@ -1,0 +1,316 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+DOC = """Roofline analysis from the compiled dry-run (deliverable g).
+
+XLA's HloCostAnalysis counts a while-loop body ONCE regardless of trip
+count, so the full-step compile (which proves fit + sharding) undercounts
+scanned layers. This module therefore derives per-cell costs by PROBE
+COMPILATION: it compiles the same step at several reduced layer counts
+(+1 finite differences per segment kind: frozen/trainable x global/local
+x encoder), reads flops / bytes / per-collective payloads from each
+compiled artifact, and extrapolates linearly to the full depth. Probes
+use microbatches=1, a single attention KV block and a single CE chunk so
+no loop hides cost; remat stays ON so recompute FLOPs are counted the
+way they execute.
+
+Terms per (arch x shape) on the single-pod mesh (TPU v5e constants):
+  compute    = HLO_FLOPs_per_device / 197e12
+  memory     = HLO_bytes_per_device / 819e9
+  collective = collective_payload_bytes_per_device / 50e9  (per ICI link)
+
+  MODEL_FLOPS = 6*N_active*tokens (train) / 2*N_active*tokens (serve),
+  reported per device for comparability with HLO_FLOPs.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.roofline --all --out results/roofline.json
+  PYTHONPATH=src python -m benchmarks.roofline --arch minitron-4b --shape train_4k
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+
+from repro.configs import (SHAPES, cell_supported, get_config, list_archs,
+                           reduced)
+from repro.launch import mesh as mesh_lib
+from repro.launch import steps
+from repro.launch.dryrun import collective_bytes
+from repro.models import model as M
+from repro.parallel import sharding
+
+PEAK = mesh_lib.PEAK_FLOPS_BF16
+HBM = mesh_lib.HBM_BW
+ICI = mesh_lib.ICI_BW
+
+
+# ---------------------------------------------------------------------------
+# Probe configs: reduced depths with controlled segment composition
+
+
+def _probe_cfg(cfg, counts: Dict[str, int]):
+    """Build a same-width config with the given segment counts."""
+    if cfg.family == "hybrid":
+        fg, fl, tg, tl = (counts["frozen_global"], counts["frozen_local"],
+                          counts["train_global"], counts["train_local"])
+        total = fg + fl + tg + tl
+        glb = tuple(range(fg)) + tuple(range(total - tg, total))
+        return dataclasses.replace(cfg, num_layers=total, global_layers=glb), \
+            tg + tl
+    if cfg.encoder_layers:
+        enc, fd, td = counts["encoder"], counts["frozen"], counts["train"]
+        return dataclasses.replace(cfg, num_layers=fd + td,
+                                   encoder_layers=enc), td
+    f, t = counts["frozen"], counts["train"]
+    return dataclasses.replace(cfg, num_layers=f + t), t
+
+
+def _dims_for(cfg, kind: str) -> Dict[str, int]:
+    """Base probe counts (every dim >= 1)."""
+    if cfg.family == "hybrid":
+        if kind == "train":
+            return {"frozen_global": 1, "frozen_local": 1,
+                    "train_global": 1, "train_local": 1}
+        return {"frozen_global": 1, "frozen_local": 1,
+                "train_global": 0, "train_local": 0}
+    if cfg.encoder_layers:
+        if kind == "train":
+            return {"encoder": 1, "frozen": 1, "train": 1}
+        return {"encoder": 1, "frozen": 2, "train": 0}
+    if kind == "train":
+        return {"frozen": 1, "train": 1}
+    return {"frozen": 2, "train": 0}
+
+
+def _target_counts(cfg, kind: str, trainable_blocks: int) -> Dict[str, int]:
+    l = cfg.num_layers
+    tb = trainable_blocks if kind == "train" else 0
+    if cfg.family == "hybrid":
+        boundary = l - tb
+        glb = set(cfg.global_layers)
+        return {
+            "frozen_global": sum(1 for i in range(boundary) if i in glb),
+            "frozen_local": sum(1 for i in range(boundary) if i not in glb),
+            "train_global": sum(1 for i in range(boundary, l) if i in glb),
+            "train_local": sum(1 for i in range(boundary, l)
+                               if i not in glb),
+        }
+    if cfg.encoder_layers:
+        return {"encoder": cfg.encoder_layers, "frozen": l - tb, "train": tb}
+    return {"frozen": l - tb, "train": tb}
+
+
+# ---------------------------------------------------------------------------
+# Compile one probe and read its metrics
+
+
+def _compile_metrics(cfg, shape, mesh, trainable_blocks: int,
+                     extra_overrides=None) -> Dict[str, float]:
+    overrides = {
+        "microbatches": 1,
+        "ce_chunk": 1 << 30,
+        "attn_block": max(shape.seq_len, 1024),
+        "ssm_chunk": max(shape.seq_len, 256),
+        "unroll_layers": True,
+    }
+    if trainable_blocks > 0:
+        overrides["trainable_blocks"] = trainable_blocks
+    overrides.update(extra_overrides or {})
+
+    with sharding.use_mesh(mesh):
+        run = steps.default_run(cfg, shape, mesh, **overrides)
+        if shape.kind == "train":
+            fn, a_state, a_batch, in_sh = steps.build_train(cfg, run, mesh)
+            lowered = jax.jit(fn, in_shardings=in_sh).lower(a_state, a_batch)
+        elif shape.kind == "prefill":
+            fn, args, in_sh = steps.build_prefill(cfg, run, mesh)
+            lowered = jax.jit(fn, in_shardings=in_sh).lower(*args)
+        else:
+            fn, args, in_sh, out_sh = steps.build_decode(cfg, run, mesh)
+            lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                              donate_argnums=(1,)).lower(*args)
+        compiled = lowered.compile()
+        cost = compiled.cost_analysis() or {}
+        coll = collective_bytes(compiled.as_text())
+    out = {"flops": float(cost.get("flops", 0.0)),
+           "bytes": float(cost.get("bytes accessed", 0.0))}
+    for k, v in coll.items():
+        out[f"coll:{k}"] = v
+    return out
+
+
+def _metrics_linear(base: Dict[str, float], deltas: Dict[str, Dict[str, float]],
+                    base_counts: Dict[str, int], target: Dict[str, int]):
+    keys = set(base)
+    for d in deltas.values():
+        keys |= set(d)
+    out = {}
+    for k in keys:
+        v = base.get(k, 0.0)
+        for dim, dm in deltas.items():
+            coeff = dm.get(k, 0.0) - base.get(k, 0.0)
+            v += coeff * (target[dim] - base_counts[dim])
+        out[k] = max(v, 0.0)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Model FLOPs (the "useful work" yardstick)
+
+
+def model_flops(cfg, shape, n_chips: int,
+                trainable_blocks: Optional[int] = None) -> float:
+    """Useful model FLOPs per device.
+
+    Training follows the MPSL protocol: the trainable suffix costs 6*N*T
+    (fwd + both backward terms), the frozen prefix on the gradient path
+    costs 4*N*T (fwd + grad-wrt-activations only — no weight gradients).
+    Serving: 2*N_active per processed token. MoE N counts shared + top-k
+    experts only; the embedding lookup is excluded (gather, not matmul)."""
+    n_active = active_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        if trainable_blocks is None:
+            total = 6.0 * n_active * tokens
+        else:
+            frac_t = trainable_blocks / cfg.num_layers
+            body = n_active - cfg.vocab_size * cfg.d_model \
+                - (0 if cfg.tie_embeddings else cfg.d_model * cfg.vocab_size)
+            head = cfg.d_model * cfg.vocab_size          # trainable tail
+            total = (6.0 * (body * frac_t + head)
+                     + 4.0 * body * (1.0 - frac_t)) * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        total = 2.0 * (n_active - cfg.vocab_size * cfg.d_model) * tokens
+    else:
+        tokens = shape.global_batch          # one new token per sequence
+        total = 2.0 * (n_active - cfg.vocab_size * cfg.d_model) * tokens
+    return total / n_chips
+
+
+def active_params(cfg) -> float:
+    """Parameters touched per token (MoE: shared + top-k experts only)."""
+    total = M.count_params_analytic(cfg)
+    if not cfg.moe:
+        return float(total)
+    m = cfg.moe
+    from repro.models import layers as L
+    gated = 3 if L.gated_activation(cfg.activation) else 2
+    per_expert = cfg.d_model * m.d_ff_expert * gated
+    routed_all = cfg.num_layers * m.num_experts * per_expert
+    routed_active = cfg.num_layers * m.top_k * per_expert
+    return float(total - routed_all + routed_active)
+
+
+# ---------------------------------------------------------------------------
+# Cell analysis
+
+
+def analyze_cell(arch: str, shape_name: str, overrides=None,
+                 verbose: bool = True) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_supported(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": why}
+
+    mesh = mesh_lib.make_production_mesh(multi_pod=False)
+    n_chips = mesh.size
+    run0 = steps.default_run(cfg, shape, mesh, **(overrides or {}))
+    tb = run0.mpsl.trainable_blocks
+
+    base_counts = _dims_for(cfg, shape.kind)
+    target = _target_counts(cfg, shape.kind, tb)
+
+    t0 = time.time()
+
+    def compile_counts(counts):
+        pcfg, ptb = _probe_cfg(cfg, counts)
+        return _compile_metrics(pcfg, shape, mesh, ptb, overrides)
+
+    base = compile_counts(base_counts)
+    deltas = {}
+    for dim in base_counts:
+        if target[dim] == base_counts[dim]:
+            deltas[dim] = dict(base)         # no extrapolation needed
+            continue
+        probe = dict(base_counts)
+        probe[dim] += 1
+        deltas[dim] = compile_counts(probe)
+
+    metrics = _metrics_linear(base, deltas, base_counts, target)
+    coll_total = sum(v for k, v in metrics.items() if k.startswith("coll:"))
+
+    compute_t = metrics["flops"] / PEAK
+    memory_t = metrics["bytes"] / HBM
+    coll_t = coll_total / ICI
+    terms = {"compute": compute_t, "memory": memory_t, "collective": coll_t}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape, n_chips,
+                     tb if shape.kind == "train" else None)
+    rec = {
+        "arch": arch, "shape": shape_name, "status": "ok",
+        "mesh": "16x16", "kind": shape.kind,
+        "flops_per_device": metrics["flops"],
+        "bytes_per_device": metrics["bytes"],
+        "collective_bytes_per_device": coll_total,
+        "collectives": {k[5:]: v for k, v in metrics.items()
+                        if k.startswith("coll:")},
+        "compute_s": compute_t,
+        "memory_s": memory_t,
+        "collective_s": coll_t,
+        "dominant": dominant,
+        "model_flops_per_device": mf,
+        "useful_ratio": mf / metrics["flops"] if metrics["flops"] else 0.0,
+        "roofline_fraction": mf / PEAK / max(terms.values())
+        if max(terms.values()) else 0.0,
+        "analysis_s": round(time.time() - t0, 1),
+    }
+    if verbose:
+        print(f"[roofline] {arch} x {shape_name}: "
+              f"compute={compute_t*1e3:.2f}ms memory={memory_t*1e3:.2f}ms "
+              f"coll={coll_t*1e3:.2f}ms dom={dominant} "
+              f"useful={rec['useful_ratio']:.3f} "
+              f"roofline_frac={rec['roofline_fraction']:.3f}")
+    return rec
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None)
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--out", default=None)
+    args = p.parse_args(argv)
+
+    cells = []
+    if args.all:
+        for arch in list_archs():
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        cells = [(args.arch, args.shape)]
+
+    records = []
+    for arch, shape in cells:
+        try:
+            records.append(analyze_cell(arch, shape))
+        except Exception as e:  # noqa: BLE001
+            print(f"[roofline] {arch} x {shape}: FAIL {e!r}")
+            records.append({"arch": arch, "shape": shape,
+                            "status": f"FAIL: {e}"})
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"[roofline] wrote {len(records)} -> {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,84 @@
+"""Quickstart: fine-tune a Meta-Transformer-style unified encoder across 4
+edge clients with MPSL on a synthetic (vision, text) classification task.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+What happens (paper Sec. 3):
+  * each client owns a lightweight modality tokenizer (the ONLY thing it
+    trains ~0.1M params here);
+  * clients tokenize locally, smashed data goes to the server;
+  * the server encodes the concatenated global batch ONCE and takes ONE
+    backward pass of the aggregated loss L_S = sum w_n L_n;
+  * labels never leave the clients; client heads never sync.
+"""
+import sys
+import os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import MPSLConfig, RunConfig, SHAPES, reduced
+from repro.configs.meta_transformer import VIT_TINY
+from repro.core import aggregation, baselines, mpsl, split
+from repro.data import ClientLoader, SyntheticMultimodal, dirichlet_partition
+from repro.optim import schedules
+
+N_CLIENTS, BN, N_CLASSES, STEPS = 4, 4, 4, 30
+
+cfg = reduced(VIT_TINY)
+run = RunConfig(model=cfg, shape=SHAPES["train_4k"],
+                mpsl=MPSLConfig(n_clients=N_CLIENTS, trainable_blocks=2,
+                                fusion="early"),
+                compute_dtype="float32", learning_rate=1e-3)
+
+key = jax.random.PRNGKey(0)
+params, frozen, plan = split.init_mpsl_vit(
+    key, cfg, run, modalities=("vision", "text"), n_classes=N_CLASSES)
+n_client_params = sum(x.size for x in
+                      jax.tree_util.tree_leaves(params["client"])) // N_CLIENTS
+print(f"client-side params: {n_client_params/1e3:.0f}k per client "
+      f"(server trains {sum(x.size for x in jax.tree_util.tree_leaves(params['server']))/1e6:.2f}M)")
+
+loss_fn = mpsl.make_vit_loss(cfg, run, modalities=("vision", "text"),
+                             n_classes=N_CLASSES)
+step = jax.jit(mpsl.make_train_step(loss_fn, run, schedules.constant(1e-3)))
+state = mpsl.init_state(params, frozen)
+
+# Dirichlet(0.1) non-IID shards, exactly like the paper
+ds = SyntheticMultimodal(modalities=("vision", "text"), n_classes=N_CLASSES,
+                         size=512, noise=0.35)
+shards = dirichlet_partition(ds.labels, N_CLIENTS, alpha=0.1,
+                             min_per_client=BN)
+loader = ClientLoader(ds, shards, BN)
+
+for i in range(STEPS):
+    b = loader.batch(i)
+    batch = {"vision": jnp.asarray(b["vision"]),
+             "text": jnp.asarray(b["text"].astype(np.int32)),
+             "labels": jnp.asarray(b["labels"].astype(np.int32)),
+             "mask": jnp.asarray(b["mask"])}
+    state, metrics = step(state, batch)
+    if (i + 1) % 10 == 0 or i == 0:
+        print(f"step {i+1:3d}  L_S={float(metrics['loss']):.4f}  "
+              f"per-client={[round(float(x),3) for x in metrics['per_client']]}")
+
+# Post-training construction (paper Sec. 3.3): FedAvg client heads -> one model
+full = {
+    "tokenizers": aggregation.fedavg_heads(
+        state["params"]["client"]["tokenizers"]),
+    "segments": [jax.tree_util.tree_map(lambda a: a.astype(jnp.float32), s)
+                 for s in state["frozen"]["segments"]]
+    + state["params"]["server"]["segments"],
+    "final_norm": state["params"]["server"]["final_norm"],
+    "task_head": state["params"]["server"]["task_head"],
+}
+b = ds.sample(np.arange(64))
+logits = baselines.full_vit_logits(
+    full, {"vision": jnp.asarray(b["vision"]),
+           "text": jnp.asarray(b["text"].astype(np.int32))},
+    cfg, modalities=("vision", "text"))
+acc = float(jnp.mean(jnp.argmax(logits, -1) == b["labels"]))
+print(f"assembled [F_C_agg ; F_S] accuracy: {acc:.2f} "
+      f"(chance {1/N_CLASSES:.2f})")

@@ -1,0 +1,3 @@
+"""Checkpointing: sharded npz save/restore with atomic manifests."""
+from repro.checkpoint.io import (save_checkpoint, restore_checkpoint,
+                                 latest_step, AsyncCheckpointer)

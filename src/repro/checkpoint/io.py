@@ -1,0 +1,173 @@
+"""Checkpoint I/O.
+
+Layout:  <dir>/step_<k>/arrays.npz + manifest.json, written to a temp dir
+and atomically renamed — a crash mid-write can never corrupt the latest
+checkpoint (restore scans for complete manifests only). An async writer
+thread overlaps serialization with the next training steps. Restores are
+resharded onto whatever mesh is active (device_put with target shardings),
+so a job restarted on a different topology reloads cleanly — the
+elastic-restart path."""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+from jax.numpy import asarray as jnp_asarray
+
+
+def _is_key(leaf) -> bool:
+    try:
+        return jax.dtypes.issubdtype(leaf.dtype, jax.dtypes.prng_key)
+    except Exception:
+        return False
+
+
+NATIVE = {np.dtype(t) for t in
+          ("float64", "float32", "float16", "int64", "int32", "int16",
+           "int8", "uint64", "uint32", "uint16", "uint8", "bool")}
+
+
+def _to_host(v):
+    if _is_key(v):
+        return np.asarray(jax.random.key_data(v))
+    arr = np.asarray(v)
+    if arr.dtype not in NATIVE:
+        # bfloat16 / fp8 (ml_dtypes) don't survive npz — store raw bytes
+        arr = arr.view(np.uint8 if arr.dtype.itemsize == 1 else np.uint16)
+    return arr
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        out[key] = leaf
+    return out, treedef
+
+
+def save_checkpoint(directory: str, step: int, tree, extra: Optional[Dict]
+                    = None, keep: int = 3):
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    flat, _ = _flatten_with_paths(tree)
+    arrays = {k: _to_host(v) for k, v in flat.items()}
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "time": time.time(),
+        "keys": sorted(arrays.keys()),
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)                      # atomic publish
+    _gc(directory, keep)
+    return final
+
+
+def _gc(directory: str, keep: int):
+    steps = sorted(_complete_steps(directory))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{s:08d}"),
+                      ignore_errors=True)
+
+
+def _complete_steps(directory: str):
+    out = []
+    if not os.path.isdir(directory):
+        return out
+    for name in os.listdir(directory):
+        if not name.startswith("step_") or name.endswith(".tmp"):
+            continue
+        if os.path.exists(os.path.join(directory, name, "manifest.json")):
+            out.append(int(name.split("_")[1]))
+    return out
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = _complete_steps(directory)
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, template, step: Optional[int] = None,
+                       shardings=None):
+    """Restore into the structure of `template` (a pytree of arrays or
+    ShapeDtypeStructs). `shardings`: optional matching pytree of
+    NamedShardings to place shards directly on the active mesh."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            return None, None
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+
+    flat, treedef = _flatten_with_paths(template)
+    restored = {}
+    for key, leaf in flat.items():
+        arr = data[key]
+        if _is_key(leaf):
+            restored[key] = jax.random.wrap_key_data(jnp_asarray(arr))
+            continue
+        tdtype = np.dtype(leaf.dtype) if hasattr(leaf, "dtype") else arr.dtype
+        if tdtype not in NATIVE and arr.dtype in (np.uint8, np.uint16):
+            arr = arr.view(tdtype)
+        want = tuple(getattr(leaf, "shape", arr.shape))
+        if tuple(arr.shape) != want:
+            raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {want}")
+        restored[key] = arr
+
+    leaves_in_order = [restored[k] for k in flat.keys()]
+    tree = jax.tree_util.tree_unflatten(treedef, leaves_in_order)
+    if shardings is not None:
+        tree = jax.tree_util.tree_map(
+            lambda a, s: jax.device_put(a, s), tree, shardings)
+    return tree, manifest
+
+
+class AsyncCheckpointer:
+    """Fire-and-forget checkpoint writes on a background thread."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.last_error: Optional[BaseException] = None
+
+    def save(self, step: int, tree, extra=None):
+        self.wait()
+        host_tree = jax.tree_util.tree_map(_to_host, tree)
+
+        def work():
+            try:
+                save_checkpoint(self.directory, step, host_tree, extra,
+                                self.keep)
+            except BaseException as e:     # surfaced on next wait()
+                self.last_error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self.last_error is not None:
+            err, self.last_error = self.last_error, None
+            raise err

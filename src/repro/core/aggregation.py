@@ -1,0 +1,29 @@
+"""Client-head aggregation (paper Sec. 3.3): post-training FedAvg over the
+stacked client axis, and weighted loss aggregation helpers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fedavg_heads(client_params, weights=None):
+    """FedAvg the stacked [N, ...] client heads -> single head [...]."""
+    def agg(p):
+        if weights is None:
+            return jnp.mean(p, axis=0)
+        w = weights.astype(p.dtype)
+        w = w / jnp.sum(w)
+        return jnp.tensordot(w, p, axes=(0, 0))
+    return jax.tree_util.tree_map(agg, client_params)
+
+
+def select_client_head(client_params, index: int):
+    """Personalization: pick client n's head (paper's [F_Cn ; F_S])."""
+    return jax.tree_util.tree_map(lambda p: p[index], client_params)
+
+
+def broadcast_head(head, n_clients: int):
+    """Re-populate a client bank from one head (elastic join / restart)."""
+    return jax.tree_util.tree_map(
+        lambda p: jnp.broadcast_to(p[None], (n_clients,) + p.shape).copy(),
+        head)

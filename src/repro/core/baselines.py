@@ -1,0 +1,190 @@
+"""Distributed-learning baselines the paper compares against.
+
+  * Centralized fine-tuning — pooled data, full model, one optimizer.
+  * FedAvg  [McMahan et al., 2017] — every client trains the FULL model
+    locally (tokenizers + encoder + head); rounds of local steps followed
+    by weighted parameter averaging.
+  * FedCLIP [Lu et al., 2023] — lightweight adapters + head trained on a
+    FROZEN backbone, FL-aggregated; the backbone still runs on-client.
+  * Sequential SL — vanilla (non-parallel) split learning; provided as an
+    analytic latency model in core.costs (its wall-clock is N * MPSL).
+
+These run the paper's accuracy comparisons on reduced models in the
+benchmarks; client-side cost columns come from core.costs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fusion, losses
+from repro.models import layers, model as M, tokenizers as tok
+from repro.optim import adamw_init, adamw_update, apply_updates
+
+
+# ---------------------------------------------------------------------------
+# Full (unsplit) multimodal model
+
+
+def init_full_vit(key, cfg, modalities=("vision", "text"), n_classes=10,
+                  retrieval=False, with_adapter=False):
+    ks = jax.random.split(key, 8)
+    segs = M.body_segments(cfg)
+    seg_keys = jax.random.split(ks[0], len(segs))
+    p = {
+        "tokenizers": {m: tok.init_tokenizer(k, tok.MODALITIES[m], cfg.d_model)
+                       for m, k in zip(modalities,
+                                       jax.random.split(ks[1],
+                                                        len(modalities)))},
+        "segments": [M.init_segment(k, cfg, s)
+                     for k, s in zip(seg_keys, segs)],
+        "final_norm": layers.init_norm(cfg.norm, cfg.d_model),
+    }
+    if retrieval:
+        p["proj_a"] = layers.dense_init(ks[2], (cfg.d_model, 512))
+        p["proj_b"] = layers.dense_init(ks[3], (cfg.d_model, 512))
+        p["logit_scale"] = jnp.asarray(2.659, jnp.float32)
+    else:
+        p["task_head"] = {
+            "w": layers.dense_init(ks[4], (cfg.d_model, n_classes)),
+            "b": jnp.zeros((n_classes,), jnp.float32),
+        }
+    if with_adapter:                      # FedCLIP: adapter atop frozen body
+        p["adapter"] = {
+            "wi": layers.dense_init(ks[5], (cfg.d_model, cfg.d_model // 4)),
+            "wo": layers.dense_init(ks[6], (cfg.d_model // 4, cfg.d_model)),
+        }
+    return p
+
+
+def _encode(params, tokens_bnd, cfg, remat=False):
+    positions = layers.positions_from_shape(tokens_bnd.shape[0],
+                                            tokens_bnd.shape[1])
+    h = tokens_bnd
+    for sp, seg in zip(params["segments"], M.body_segments(cfg)):
+        h, _, _ = M.apply_segment(sp, h, cfg, seg, positions=positions,
+                                  remat=remat)
+    h = layers.apply_norm(h, params["final_norm"], cfg.norm)
+    if "adapter" in params:
+        a = params["adapter"]
+        h = h + jnp.einsum(
+            "btd,df,fe->bte", jax.nn.gelu(h), a["wi"].astype(h.dtype),
+            a["wo"].astype(h.dtype))
+    return h
+
+
+def full_vit_loss(params, batch, cfg, *, modalities=("vision", "text"),
+                  fusion_mode="early", task="classification",
+                  dtype=jnp.float32):
+    """Single-worker loss over batch {modality: [B, ...], labels: [B]}."""
+    tokenized = {m: tok.apply_tokenizer(params["tokenizers"][m], batch[m],
+                                        spec=tok.MODALITIES[m], dtype=dtype)
+                 for m in modalities}
+    if task == "retrieval":
+        enc = {m: _encode(params, tokenized[m], cfg) for m in modalities}
+        ma, mb = sorted(modalities)
+        pa = fusion.gap(fusion.summarize_modality(ma, enc[ma])) \
+            @ params["proj_a"].astype(dtype)
+        pb = fusion.gap(fusion.summarize_modality(mb, enc[mb])) \
+            @ params["proj_b"].astype(dtype)
+        temp = 1.0 / jnp.exp(params["logit_scale"])
+        return jnp.mean(losses.contrastive_loss(pa, pb, temp))
+    if fusion_mode == "early":
+        h = _encode(params, fusion.fuse_early(tokenized), cfg)
+        emb = fusion.gap(h)
+    else:
+        enc = {m: _encode(params, tokenized[m], cfg) for m in modalities}
+        emb = fusion.gap(fusion.fuse_late(enc))
+    th = params["task_head"]
+    logits = emb @ th["w"].astype(dtype) + th["b"].astype(dtype)
+    return jnp.mean(losses.softmax_xent(logits, batch["labels"]))
+
+
+def full_vit_logits(params, batch, cfg, *, modalities=("vision", "text"),
+                    fusion_mode="early", dtype=jnp.float32):
+    tokenized = {m: tok.apply_tokenizer(params["tokenizers"][m], batch[m],
+                                        spec=tok.MODALITIES[m], dtype=dtype)
+                 for m in modalities}
+    if fusion_mode == "early":
+        emb = fusion.gap(_encode(params, fusion.fuse_early(tokenized), cfg))
+    else:
+        enc = {m: _encode(params, tokenized[m], cfg) for m in modalities}
+        emb = fusion.gap(fusion.fuse_late(enc))
+    th = params["task_head"]
+    return emb @ th["w"].astype(dtype) + th["b"].astype(dtype)
+
+
+def retrieval_embeddings(params, batch, cfg, modalities=("text", "vision"),
+                         dtype=jnp.float32):
+    tokenized = {m: tok.apply_tokenizer(params["tokenizers"][m], batch[m],
+                                        spec=tok.MODALITIES[m], dtype=dtype)
+                 for m in modalities}
+    enc = {m: _encode(params, tokenized[m], cfg) for m in modalities}
+    ma, mb = sorted(modalities)
+    pa = fusion.gap(fusion.summarize_modality(ma, enc[ma])) \
+        @ params["proj_a"].astype(dtype)
+    pb = fusion.gap(fusion.summarize_modality(mb, enc[mb])) \
+        @ params["proj_b"].astype(dtype)
+    return pa, pb
+
+
+# ---------------------------------------------------------------------------
+# Federated rounds
+
+
+def make_fl_round(loss_fn, lr: float, local_steps: int,
+                  trainable_filter=None):
+    """Returns round(params_stack [N,...], batches [N, steps, ...]) that runs
+    `local_steps` of client-local Adam then FedAvg-averages.
+
+    trainable_filter(path) -> bool freezes leaves (FedCLIP backbone)."""
+
+    def local_train(params, client_batches):
+        opt = adamw_init(params)
+
+        def step(carry, b):
+            p, o = carry
+            loss, g = jax.value_and_grad(loss_fn)(p, b)
+            if trainable_filter is not None:
+                g = _mask_grads(g, trainable_filter)
+            upd, o = adamw_update(g, o, p, lr=lr)
+            return (apply_updates(p, upd), o), loss
+
+        (params, _), ls = jax.lax.scan(step, (params, opt), client_batches)
+        return params, ls.mean()
+
+    def fl_round(params_stack, batches_stack):
+        new_stack, client_losses = jax.vmap(local_train)(params_stack,
+                                                         batches_stack)
+        avg = jax.tree_util.tree_map(lambda p: jnp.mean(p, axis=0),
+                                     new_stack)
+        bank = jax.tree_util.tree_map(
+            lambda p: jnp.broadcast_to(
+                p[None], (params_stack_count(params_stack),) + p.shape),
+            avg)
+        return bank, avg, client_losses.mean()
+
+    return fl_round
+
+
+def params_stack_count(stack) -> int:
+    return jax.tree_util.tree_leaves(stack)[0].shape[0]
+
+
+def _mask_grads(grads, keep):
+    def rule(key_path, g):
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in key_path)
+        return g if keep(path) else jnp.zeros_like(g)
+    return jax.tree_util.tree_map_with_path(rule, grads)
+
+
+FEDCLIP_TRAINABLE = ("adapter", "task_head", "proj_a", "proj_b",
+                     "logit_scale")
+
+
+def fedclip_filter(path: str) -> bool:
+    return any(t in path for t in FEDCLIP_TRAINABLE)

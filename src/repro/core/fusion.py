@@ -1,0 +1,43 @@
+"""Modality fusion (paper Sec. 3.2).
+
+  early — tokenized modalities are concatenated CLIENT-side into one joint
+          sequence; the server encodes the joint vector once.
+  late  — each modality is encoded independently by the server body; the
+          cls tokens (vision/audio) / pooled text are concatenated after.
+
+Either way a global-average-pool over the fused representation feeds the
+task head (paper Eq. 3)."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax.numpy as jnp
+
+
+def fuse_early(tokenized: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """{modality: [..., T_m, D]} -> [..., sum(T_m), D] (client-side concat).
+
+    Works on both the plain [B, T, D] and the stacked client [N, Bn, T, D]
+    layouts (token axis is -2)."""
+    return jnp.concatenate([tokenized[m] for m in sorted(tokenized)],
+                           axis=-2)
+
+
+def summarize_modality(name: str, encoded: jnp.ndarray) -> jnp.ndarray:
+    """Per-modality summary after the encoder (late fusion): cls token for
+    vision/audio (prepended by the tokenizer), mean-pool for text."""
+    if name == "text":
+        return jnp.mean(encoded, axis=-2, keepdims=True)
+    return encoded[..., :1, :]
+
+
+def fuse_late(encoded: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """{modality: [B, T_m, D]} (post-encoder) -> [B, M, D]."""
+    return jnp.concatenate(
+        [summarize_modality(m, encoded[m]) for m in sorted(encoded)],
+        axis=-2)
+
+
+def gap(fused: jnp.ndarray) -> jnp.ndarray:
+    """Global average pooling -> the final multimodal embedding [B, D]."""
+    return jnp.mean(fused, axis=-2)

@@ -1,0 +1,378 @@
+"""MPSL train step — the paper's technique as one SPMD program.
+
+One jitted step realizes the full client/server exchange:
+
+  1. client forward  — per-client heads (stacked [N, ...] params, vmapped
+     math) tokenize local minibatches into smashed data a_n;
+  2. uplink          — activations resharded from the client axis into the
+     server's global-batch layout (the paper's server-side concat; int8-
+     compressed when enabled);
+  3. server forward  — ONE unified encoder pass over the concatenated
+     global batch (frozen prefix + trainable suffix), no per-client
+     sub-models;
+  4. tail + losses   — predictions return to the client layout, each
+     client computes its own loss against labels that never left its
+     shard (no label sharing); per-client losses L_n are combined as
+     L_S = sum_n |B_n|/|B| * L_n with a participation mask (straggler /
+     dropout handling);
+  5. single backward — jax.grad of L_S IS the paper's single aggregated
+     backward pass; cut-layer gradients reach each client's adapter
+     through the same program (int8-compressed when enabled).
+
+`backward_mode='per_client'` provides the vanilla-PSL baseline (N separate
+backward passes via lax.map) for the cost comparison benchmarks.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compression, fusion, losses, split
+from repro.models import layers, model as M, tokenizers as tok
+from repro.optim import (adamw_init, adamw_update, apply_updates,
+                         clip_by_global_norm)
+from repro.parallel import sharding
+
+
+# ---------------------------------------------------------------------------
+# Shared pieces
+
+
+def _client_weights(mask, n):
+    """w_n = |B_n| / |B| over participating clients (uniform B_n here)."""
+    m = mask.astype(jnp.float32)
+    return m / jnp.maximum(jnp.sum(m), 1.0)
+
+
+def _run_body(frozen, server, cfg, h, positions, impls, remat,
+              enc_out=None):
+    """Frozen prefix + trainable suffix, then final norm."""
+    aux = jnp.zeros((), jnp.float32)
+    fsegs, tsegs = _segments_for(frozen, server, cfg)
+    for sp, seg in zip(frozen["segments"], fsegs):
+        h, _, a = M.apply_segment(sp, h, cfg, seg, positions=positions,
+                                  enc_out=enc_out, impls=impls, remat=remat)
+        aux = aux + a
+    for sp, seg in zip(server["segments"], tsegs):
+        h, _, a = M.apply_segment(sp, h, cfg, seg, positions=positions,
+                                  enc_out=enc_out, impls=impls, remat=remat)
+        aux = aux + a
+    h = layers.apply_norm(h, server["final_norm"], cfg.norm)
+    return h, aux
+
+
+def len_from_params(tree) -> int:
+    total = 0
+    for sp in tree["segments"]:
+        total += jax.tree_util.tree_leaves(sp)[0].shape[0]
+    return total
+
+
+def _segments_for(frozen, server, cfg):
+    boundary = len_from_params(frozen)
+    return split.split_segments(M.body_segments(cfg), boundary)
+
+
+# ---------------------------------------------------------------------------
+# LM-family MPSL loss (assigned architectures)
+
+
+def make_lm_loss(cfg, run):
+    """Returns loss_fn(trainable, frozen, batch, rng) -> (L_S, metrics).
+
+    batch: tokens [N, Bn, S], labels [N, Bn, S], mask [N]
+           (+ patch_embeds [N, Bn, P, D] for vlm,
+            frame_embeds [N, Bn, F, D] for audio)."""
+    mpsl = run.mpsl
+    cdt = jnp.dtype(run.compute_dtype)
+    impls = dict(run_impls(run))
+    remat = run.remat != "none"
+
+    def loss_fn(trainable, frozen, batch, rng):
+        tokens = batch["tokens"]
+        n, bn, s_text = tokens.shape
+        r_up, r_down = jax.random.split(jax.random.fold_in(rng, 1))
+
+        # ---- 1. client forward: frozen tokenizer + per-client adapter ----
+        h = frozen["embed"]["table"].astype(cdt)[tokens]       # [N,Bn,S,D]
+        if cfg.pos_embed == "learned":
+            h = h + frozen["embed"]["pos"].astype(cdt)[
+                layers.positions_from_shape(1, s_text)[0]]
+        parts = [h]
+        if "patch_embeds" in batch:
+            parts = [batch["patch_embeds"].astype(cdt), h]
+        h = jnp.concatenate(parts, axis=2) if len(parts) > 1 else h
+        h = split.apply_client_adapter(trainable["client"]["adapter"], h)
+        h = sharding.shard_act(h, ("client", None, None, None))
+
+        # ---- 2. uplink (smashed data) ----
+        if mpsl.compress_uplink:
+            h = compression.compress_activations(h, r_up)
+        if mpsl.compress_downlink:
+            h = compression.compress_gradients(h, r_down)
+
+        seq = h.shape[2]
+        hb = h.reshape(n * bn, seq, cfg.d_model)
+        hb = sharding.shard_act(hb, ("batch", None, None))
+        positions = _build_positions(cfg, batch, n * bn, seq)
+
+        # ---- whisper: frozen encoder over stub frame embeddings ----
+        enc_out = None
+        if "frame_embeds" in batch:
+            fe = batch["frame_embeds"].astype(cdt)
+            fe = split.apply_client_adapter(trainable["client"]["adapter"], fe)
+            fe = fe.reshape(n * bn, fe.shape[2], cfg.d_model)
+            enc_out = M.run_encoder(frozen, fe, cfg, impls=impls, remat=remat)
+
+        # ---- 3. server forward: ONE pass over the global batch ----
+        hb, aux = _run_body(frozen, trainable["server"], cfg, hb, positions,
+                            impls, remat, enc_out=enc_out)
+
+        # ---- 4. tail in CLIENT layout: labels never leave their shard ----
+        hc = hb.reshape(n, bn, seq, cfg.d_model)
+        hc = sharding.shard_act(hc, ("client", None, None, None))
+        # next-token LM loss on the text region only
+        text0 = seq - s_text
+        hc_text = hc[:, :, text0:, :]
+        labels = batch["labels"]                                # [N,Bn,S]
+        flat_h = hc_text[:, :, :-1, :].reshape(-1, cfg.d_model)
+        flat_l = labels[:, :, 1:].reshape(-1)
+        w_tail = (trainable["server"]["lm_head"] if "lm_head"
+                  in trainable["server"] else
+                  frozen["embed"]["table"].T)
+        per_tok = losses.chunked_softmax_xent(
+            flat_h, w_tail, flat_l, chunk=run_ce_chunk(run))
+        per_client = per_tok.reshape(n, -1).mean(axis=1)        # L_n
+
+        # ---- 5. aggregated loss => single backward pass ----
+        w = _client_weights(batch["mask"], n)
+        l_s = jnp.sum(w * per_client) + aux
+        metrics = {"loss": l_s, "per_client": per_client,
+                   "aux": aux, "participating": jnp.sum(batch["mask"])}
+        return l_s, metrics
+
+    return loss_fn
+
+
+def _build_positions(cfg, batch, b, seq):
+    if cfg.pos_embed == "mrope" and "patch_embeds" in batch:
+        p = batch["patch_embeds"].shape[2]
+        grid = int(p ** 0.5) or 1
+        idx = jnp.arange(p, dtype=jnp.int32)
+        img = jnp.stack([jnp.zeros((p,), jnp.int32), idx // grid, idx % grid])
+        t0 = (idx // grid).max() + 1 if p else 0
+        tpos = jnp.arange(seq - p, dtype=jnp.int32) + t0
+        txt = jnp.stack([tpos, tpos, tpos])
+        pos3 = jnp.concatenate([img, txt], axis=1)              # [3, S]
+        return jnp.broadcast_to(pos3[None], (b, 3, seq))
+    return layers.positions_from_shape(b, seq)
+
+
+def run_impls(run):
+    return run.impls
+
+
+def run_ce_chunk(run):
+    return run.ce_chunk
+
+
+# ---------------------------------------------------------------------------
+# Paper-mode (ViT / Meta-Transformer) MPSL loss
+
+
+def make_vit_loss(cfg, run, modalities=("vision", "text"),
+                  task: str = "classification", n_classes: int = 10):
+    mpsl = run.mpsl
+    cdt = jnp.dtype(run.compute_dtype)
+    impls = dict(run_impls(run))
+    remat = run.remat != "none"
+
+    def encode(frozen, server, tokens_bnd):
+        b = tokens_bnd.shape[0]
+        positions = layers.positions_from_shape(b, tokens_bnd.shape[1])
+        h, aux = _run_body(frozen, server, cfg, tokens_bnd, positions,
+                           impls, remat)
+        return h, aux
+
+    def loss_fn(trainable, frozen, batch, rng):
+        mask = batch["mask"]
+        n = mask.shape[0]
+        r_up, r_down = jax.random.split(jax.random.fold_in(rng, 2))
+
+        # ---- client tokenizers (per-client params, vmapped) ----
+        tokenized = {}
+        for m in modalities:
+            spec = tok.MODALITIES[m]
+            x = batch[m]
+            f = functools.partial(tok.apply_tokenizer, spec=spec, dtype=cdt)
+            tokenized[m] = jax.vmap(
+                lambda p, xx: f(p, xx))(trainable["client"]["tokenizers"][m],
+                                        x)
+            tokenized[m] = sharding.shard_act(
+                tokenized[m], ("client", None, None, None))
+
+        bn = next(iter(tokenized.values())).shape[1]
+
+        def uplink(a):
+            if mpsl.compress_uplink:
+                a = compression.compress_activations(a, r_up)
+            if mpsl.compress_downlink:
+                a = compression.compress_gradients(a, r_down)
+            return a.reshape((n * bn,) + a.shape[2:])
+
+        aux = jnp.zeros((), jnp.float32)
+        if task == "retrieval":
+            enc = {}
+            for m in modalities:
+                e, a = encode(frozen, trainable["server"], uplink(tokenized[m]))
+                enc[m] = e
+                aux = aux + a
+            ma, mb = sorted(modalities)
+            emb_a = fusion.gap(fusion.summarize_modality(ma, enc[ma]))
+            emb_b = fusion.gap(fusion.summarize_modality(mb, enc[mb]))
+            pa = emb_a @ trainable["server"]["proj_a"].astype(cdt)
+            pb = emb_b @ trainable["server"]["proj_b"].astype(cdt)
+            temp = 1.0 / jnp.exp(trainable["server"]["logit_scale"])
+            per_sample = losses.contrastive_loss(pa, pb, temp)   # [N*Bn]
+            per_client = per_sample.reshape(n, bn).mean(axis=1)
+        else:
+            if mpsl.fusion == "early":
+                joint = fusion.fuse_early(tokenized)             # [N,Bn,T,D]
+                h, aux = encode(frozen, trainable["server"], uplink(joint))
+                emb = fusion.gap(h)                              # [N*Bn, D]
+            else:
+                enc = {}
+                for m in modalities:
+                    e, a = encode(frozen, trainable["server"],
+                                  uplink(tokenized[m]))
+                    enc[m] = e
+                    aux = aux + a
+                emb = fusion.gap(fusion.fuse_late(enc))
+            th = trainable["server"]["task_head"]
+            logits = emb @ th["w"].astype(cdt) + th["b"].astype(cdt)
+            labels = batch["labels"].reshape(-1)
+            per_sample = losses.softmax_xent(logits, labels)
+            per_client = per_sample.reshape(n, bn).mean(axis=1)
+
+        w = _client_weights(mask, n)
+        l_s = jnp.sum(w * per_client) + aux
+        acc = None
+        metrics = {"loss": l_s, "per_client": per_client, "aux": aux,
+                   "participating": jnp.sum(mask)}
+        return l_s, metrics
+
+    return loss_fn
+
+
+# ---------------------------------------------------------------------------
+# Train step factory
+
+
+def _split_microbatches(batch, mu: int):
+    """[N, Bn, ...] client batches -> [mu, N, Bn/mu, ...] microbatches.
+
+    The client axis is preserved (it is the mesh's data axis); each
+    client's LOCAL minibatch is what gets split — the paper's sequential
+    large-batch simulation, noted in Sec. 4.2."""
+    def f(k, x):
+        if k == "mask":
+            return jnp.broadcast_to(x[None], (mu,) + x.shape)
+        n, bn = x.shape[:2]
+        assert bn % mu == 0, (k, x.shape, mu)
+        y = x.reshape((n, mu, bn // mu) + x.shape[2:])
+        return jnp.swapaxes(y, 0, 1)
+    return {k: f(k, v) for k, v in batch.items()}
+
+
+def make_train_step(loss_fn, run, sched, backward_mode: str = "aggregated",
+                    microbatches: int = 1):
+    """One MPSL optimization step (client + server updates).
+
+    aggregated  — the paper's single backward pass over L_S.
+    per_client  — vanilla-PSL baseline: N separate backward passes
+                  (lax.map over clients), summed. Gradients are identical
+                  (linearity); cost is not — used by the benchmarks."""
+
+    def grad_agg(params, frozen, batch, rng):
+        if microbatches <= 1:
+            return jax.value_and_grad(loss_fn, has_aux=True)(
+                params, frozen, batch, rng)
+        mb = _split_microbatches(batch, microbatches)
+
+        def body(carry, b):
+            g_acc, l_acc = carry
+            (l, met), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, frozen, b, rng)
+            g_acc = jax.tree_util.tree_map(jnp.add, g_acc, g)
+            return (g_acc, l_acc + l), met
+
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (grads, loss_sum), mets = jax.lax.scan(
+            body, (zeros, jnp.zeros((), jnp.float32)), mb)
+        inv = 1.0 / microbatches
+        grads = jax.tree_util.tree_map(lambda g: g * inv, grads)
+        metrics = jax.tree_util.tree_map(lambda m: jnp.mean(m, axis=0), mets)
+        return (loss_sum * inv, metrics), grads
+
+    def step(state, batch):
+        rng = jax.random.fold_in(state["rng"], state["step"])
+        if backward_mode == "aggregated":
+            (loss, metrics), grads = grad_agg(
+                state["params"], state["frozen"], batch, rng)
+        else:
+            grads, loss, metrics = _per_client_grads(
+                loss_fn, state["params"], state["frozen"], batch, rng)
+        grads, gnorm = clip_by_global_norm(grads, run.grad_clip)
+        lr = sched(state["step"])
+        updates, opt = adamw_update(
+            grads, state["opt"], state["params"], lr=lr,
+            weight_decay=run.weight_decay)
+        params = apply_updates(state["params"], updates)
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr)
+        new_state = {"params": params, "frozen": state["frozen"],
+                     "opt": opt, "step": state["step"] + 1,
+                     "rng": state["rng"]}
+        return new_state, metrics
+
+    return step
+
+
+def _per_client_grads(loss_fn, params, frozen, batch, rng):
+    """Vanilla PSL: one backward per client (cost baseline).
+
+    Each client's backward computes grad of its own L_n; the server then
+    combines with the same global weights w_n = |B_n|/|B| the aggregated
+    mode uses, so gradients are bitwise-comparable."""
+    n = batch["mask"].shape[0]
+    w = _client_weights(batch["mask"], n)
+
+    def one(i):
+        m = jax.nn.one_hot(i, n) * batch["mask"]
+        b = dict(batch, mask=m)
+        (l, met), g = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, frozen, b, rng)
+        g = jax.tree_util.tree_map(lambda x: x * w[i], g)
+        return g, l
+
+    idx = jnp.arange(n)
+    grads, ls = jax.lax.map(one, idx)
+    grads = jax.tree_util.tree_map(lambda g: jnp.sum(g, axis=0), grads)
+    loss = jnp.sum(w * ls)
+    return grads, loss, {"loss": loss,
+                         "per_client": ls,
+                         "aux": jnp.zeros((), jnp.float32),
+                         "participating": jnp.sum(batch["mask"])}
+
+
+def init_state(params, frozen, seed: int = 0):
+    return {
+        "params": params,
+        "frozen": frozen,
+        "opt": adamw_init(params),
+        "step": jnp.zeros((), jnp.int32),
+        "rng": jax.random.PRNGKey(seed),
+    }

@@ -1,0 +1,6 @@
+"""Data pipeline: synthetic multimodal tasks, Dirichlet non-IID
+partitioning, and a step-indexed (seekable, restart-reproducible) loader."""
+from repro.data.partition import dirichlet_partition
+from repro.data.synthetic import (SyntheticMultimodal, SyntheticLM,
+                                  SyntheticRetrieval)
+from repro.data.loader import ClientLoader

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical hot spots, with pure-jnp
+oracles (ref.py) and jit'd wrappers (ops.py). Validated in interpret mode
+on CPU; interpret=False on real TPU.
+
+  flash_attention — HBM->VMEM blocked online-softmax attention (the body's
+                    dominant matmul pair at 4k-32k sequence lengths).
+  selective_scan  — Mamba recurrence with VMEM-resident state, chunked
+                    along the sequential grid axis.
+  quant8          — fused int8 quant-dequant for the MPSL smashed-data
+                    uplink / cut-layer-gradient downlink.
+"""

@@ -1,0 +1,118 @@
+"""Flash attention as a Pallas TPU kernel.
+
+TPU adaptation of the memory-hierarchy insight behind FlashAttention:
+HBM -> VMEM blocking with an online softmax so the S x S score matrix is
+never materialized. The grid is (batch, q-head, q-block, kv-block); the
+TPU grid executes the LAST axis sequentially per core, so the f32
+accumulator / running max / normalizer live in VMEM scratch across the
+kv-block sweep (revolving accumulation — the Pallas-TPU analogue of the
+CUDA version's per-SM shared-memory loop).
+
+GQA is handled by BlockSpec index maps: q head h reads kv head h // G —
+no KV duplication in VMEM. Masking (causal / sliding window / validity)
+is by absolute positions streamed as int32 blocks, so the same kernel
+serves training, prefill and ragged decode layouts.
+
+Block shapes are MXU-aligned (multiples of 128 on the contracting dims;
+hd itself is 64/128 for every assigned arch).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _kernel(qpos_ref, kpos_ref, kvalid_ref, q_ref, k_ref, v_ref,  # inputs
+            o_ref,                                                # outputs
+            acc_ref, m_ref, l_ref,                                # scratch
+            *, causal: bool, window: int, nk: int, scale: float):
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, :, 0, :]                     # [bq, hd]
+    k = k_ref[0, :, 0, :]                     # [bk, hd]
+    v = v_ref[0, :, 0, :]                     # [bk, hd]
+    qp = qpos_ref[0, :]                       # [bq] int32
+    kp = kpos_ref[0, :]                       # [bk] int32
+    kv = kvalid_ref[0, :]                     # [bk] bool
+
+    s = jax.lax.dot_general(
+        q.astype(jnp.float32) * scale, k.astype(jnp.float32),
+        (((1,), (1,)), ((), ())))             # [bq, bk]
+
+    ok = kv[None, :]
+    if causal:
+        ok &= kp[None, :] <= qp[:, None]
+    if window > 0:
+        ok &= (qp[:, None] - kp[None, :]) < window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_prev * corr + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot(
+        p.astype(v.dtype), v).astype(jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        o_ref[0, :, 0, :] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+        ).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, q_pos, k_pos, *, causal=True, window=0,
+                        k_valid=None, block_q: int = 512,
+                        block_k: int = 512, interpret: bool = False):
+    """q [B,Sq,H,hd], k/v [B,Sk,K,hd] -> [B,Sq,H,hd]."""
+    b, sq, h, hd = q.shape
+    sk, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk, block_q, block_k)
+    nq, nk = sq // block_q, sk // block_k
+    if k_valid is None:
+        k_valid = jnp.ones((b, sk), bool)
+
+    grid = (b, h, nq, nk)
+    kernel = functools.partial(_kernel, causal=causal, window=int(window),
+                               nk=nk, scale=hd ** -0.5)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q), lambda bi, hi, iq, ik: (bi, iq)),
+            pl.BlockSpec((1, block_k), lambda bi, hi, iq, ik: (bi, ik)),
+            pl.BlockSpec((1, block_k), lambda bi, hi, iq, ik: (bi, ik)),
+            pl.BlockSpec((1, block_q, 1, hd),
+                         lambda bi, hi, iq, ik: (bi, iq, hi, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda bi, hi, iq, ik: (bi, ik, hi // g, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda bi, hi, iq, ik: (bi, ik, hi // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, hd),
+                               lambda bi, hi, iq, ik: (bi, iq, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, sq, h, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),       # acc
+            pltpu.VMEM((block_q,), jnp.float32),          # m
+            pltpu.VMEM((block_q,), jnp.float32),          # l
+        ],
+        interpret=interpret,
+    )(q_pos, k_pos, k_valid, q, k, v)

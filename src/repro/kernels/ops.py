@@ -1,0 +1,130 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Forward passes run the kernels; backward passes use recompute-based VJPs
+through the pure-jnp references (the standard flash-attention strategy —
+nothing is stashed, the backward re-derives what it needs). On this CPU
+container kernels execute in interpret mode; on TPU `interpret=False`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import quant8 as _q8
+from repro.kernels import ref as _ref
+from repro.kernels import selective_scan as _ss
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9))
+def flash_attention(q, k, v, q_pos, k_pos, causal=True, window=0,
+                    k_valid=None, block_q=512, block_k=512):
+    kv = k_valid if k_valid is not None else jnp.ones(k_pos.shape, bool)
+    return _fa.flash_attention_fwd(q, k, v, q_pos, k_pos, causal=causal,
+                                   window=window, k_valid=kv,
+                                   block_q=block_q, block_k=block_k,
+                                   interpret=INTERPRET)
+
+
+def _fa_fwd(q, k, v, q_pos, k_pos, causal, window, k_valid, block_q,
+            block_k):
+    out = flash_attention(q, k, v, q_pos, k_pos, causal, window, k_valid,
+                          block_q, block_k)
+    return out, (q, k, v, q_pos, k_pos)
+
+
+def _fa_bwd(causal, window, k_valid, block_q, block_k, res, g):
+    q, k, v, q_pos, k_pos = res
+    kv = k_valid if k_valid is not None else jnp.ones(k_pos.shape, bool)
+
+    def f(q, k, v):
+        return _ref.flash_attention_ref(q, k, v, q_pos, k_pos,
+                                        causal=causal, window=window,
+                                        k_valid=kv)
+
+    _, vjp = jax.vjp(f, q, k, v)
+    dq, dk, dv = vjp(g)
+    return dq, dk, dv, None, None
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+# ---------------------------------------------------------------------------
+# selective scan
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6,))
+def selective_scan(x, dt, b_in, c_in, a_log, h0=None, chunk=256):
+    y, h_final = _ss.selective_scan_fwd(x, dt, b_in, c_in, a_log,
+                                        chunk=chunk, interpret=INTERPRET)
+    if h0 is not None:
+        # recurrence is linear in h: add the h0 propagation analytically
+        y0, hf0 = _h0_propagation(dt, c_in, a_log, h0)
+        y = y + y0.astype(y.dtype)
+        h_final = h_final + hf0
+    return y, h_final
+
+
+def _h0_propagation(dt, c_in, a_log, h0):
+    """Contribution of a nonzero initial state: h_t += (prod_{s<=t} a_s) h0,
+    so y_t += C_t . (cumprod a) h0."""
+    a_neg = -jnp.exp(a_log.astype(jnp.float32))
+    loga = dt.astype(jnp.float32)[..., None] * a_neg     # [B,S,di,ds]
+    cum = jnp.cumsum(loga, axis=1)
+    hprop = jnp.exp(cum) * h0.astype(jnp.float32)[:, None]
+    y0 = jnp.einsum("bsnd,bsd->bsn", hprop, c_in.astype(jnp.float32))
+    return y0, hprop[:, -1]
+
+
+def _ss_fwd(x, dt, b_in, c_in, a_log, h0, chunk):
+    out = selective_scan(x, dt, b_in, c_in, a_log, h0, chunk)
+    return out, (x, dt, b_in, c_in, a_log, h0)
+
+
+def _ss_bwd(chunk, res, g):
+    x, dt, b_in, c_in, a_log, h0 = res
+    gy, gh = g
+
+    if h0 is None:
+        def f(x, dt, b_in, c_in, a_log):
+            return _ref.selective_scan_ref(x, dt, b_in, c_in, a_log)
+        _, vjp = jax.vjp(f, x, dt, b_in, c_in, a_log)
+        grads = vjp((gy, gh))
+        return grads + (None,)
+
+    def f(x, dt, b_in, c_in, a_log, h0):
+        return _ref.selective_scan_ref(x, dt, b_in, c_in, a_log, h0)
+    _, vjp = jax.vjp(f, x, dt, b_in, c_in, a_log, h0)
+    return vjp((gy, gh))
+
+
+selective_scan.defvjp(_ss_fwd, _ss_bwd)
+
+
+# ---------------------------------------------------------------------------
+# quant-dequant (straight-through)
+
+
+@jax.custom_vjp
+def quant_dequant(x):
+    return _q8.quant_dequant_fwd(x, interpret=INTERPRET)
+
+
+def _qd_fwd(x):
+    return quant_dequant(x), None
+
+
+def _qd_bwd(_res, g):
+    return (g,)
+
+
+quant_dequant.defvjp(_qd_fwd, _qd_bwd)

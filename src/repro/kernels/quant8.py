@@ -1,0 +1,52 @@
+"""Fused int8 quant-dequant Pallas kernel for the MPSL smashed-data links.
+
+The uplink/downlink compression (core.compression) is pure elementwise +
+row-reduction work; fusing scale computation, rounding and dequant into
+one VMEM pass keeps it bandwidth-bound at one read + one write per
+element instead of the four passes the unfused lowering takes.
+
+Grid: (rows / block_rows,). Each step loads a [block_rows, d] tile,
+computes per-row absmax scales on the VPU, quantizes and immediately
+dequantizes (training-side straight-through value).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, y_ref, *, qmax: float):
+    x = x_ref[...].astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True) / qmax,
+                        1e-12)
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax)
+    y_ref[...] = (q * scale).astype(y_ref.dtype)
+
+
+def quant_dequant_fwd(x, *, bits: int = 8, block_rows: int = 256,
+                      interpret: bool = False):
+    """x [..., d] -> int8-precision x̂ with per-row symmetric scales."""
+    orig_shape = x.shape
+    d = x.shape[-1]
+    rows = x.size // d
+    xr = x.reshape(rows, d)
+    block_rows = min(block_rows, rows)
+    pad = (-rows) % block_rows
+    if pad:
+        xr = jnp.pad(xr, ((0, pad), (0, 0)))
+    nr = xr.shape[0] // block_rows
+
+    y = pl.pallas_call(
+        functools.partial(_kernel, qmax=2.0 ** (bits - 1) - 1),
+        grid=(nr,),
+        in_specs=[pl.BlockSpec((block_rows, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xr.shape, x.dtype),
+        interpret=interpret,
+    )(xr)
+    if pad:
+        y = y[:rows]
+    return y.reshape(orig_shape)

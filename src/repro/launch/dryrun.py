@@ -1,0 +1,180 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+DOC = """Multi-pod dry-run.
+
+Lowers + compiles every (architecture x input-shape) cell on the
+production meshes — 16x16 (single pod, 256 chips) and 2x16x16 (2 pods,
+512 chips) — using 512 placeholder host devices. No arrays are ever
+allocated (ShapeDtypeStruct inputs); success proves the sharding config
+is coherent and the memory/cost analyses feed the roofline.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch minitron-4b \
+      --shape train_4k [--multi-pod] [--out results.json]
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.configs import SHAPES, cell_supported, get_config, list_archs
+from repro.launch import mesh as mesh_lib
+from repro.launch import steps
+from repro.parallel import sharding
+
+COLLECTIVE_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[^=]*=?\s*\(?([a-z0-9]+)\[([0-9,]*)\]")
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+               "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+               "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum per-device result bytes of every collective op in the HLO."""
+    out: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(
+            r".*= *\(?([a-z0-9]+)\[([0-9,]*)\][^)]*\)? *"
+            r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+            r"collective-permute)", s)
+        if not m:
+            continue
+        dt, dims, op = m.group(1), m.group(2), m.group(3)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out[op] = out.get(op, 0.0) + n * DTYPE_BYTES[dt]
+    return out
+
+
+def _mem_dict(mem) -> Dict[str, float]:
+    keys = ("generated_code_size_in_bytes", "argument_size_in_bytes",
+            "output_size_in_bytes", "temp_size_in_bytes",
+            "alias_size_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = float(v)
+    return out
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             overrides: Optional[Dict[str, Any]] = None,
+             verbose: bool = True) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_supported(cfg, shape)
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+    }
+    if not ok:
+        rec["status"] = why
+        if verbose:
+            print(f"[dryrun] {arch} x {shape_name}: {why}")
+        return rec
+
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    with sharding.use_mesh(mesh):
+        run = steps.default_run(cfg, shape, mesh, **(overrides or {}))
+        if shape.kind == "train":
+            fn, a_state, a_batch, in_sh = steps.build_train(cfg, run, mesh)
+            lowered = jax.jit(fn, in_shardings=in_sh).lower(a_state, a_batch)
+        elif shape.kind == "prefill":
+            fn, args, in_sh = steps.build_prefill(cfg, run, mesh)
+            lowered = jax.jit(fn, in_shardings=in_sh).lower(*args)
+        else:
+            fn, args, in_sh, out_sh = steps.build_decode(cfg, run, mesh)
+            lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                              donate_argnums=(1,)).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        cost = compiled.cost_analysis() or {}
+        mem = compiled.memory_analysis()
+        hlo = compiled.as_text()
+        coll = collective_bytes(hlo)
+
+    rec.update({
+        "status": "ok",
+        "kind": shape.kind,
+        "microbatches": run.microbatches,
+        "n_clients": run.mpsl.n_clients,
+        "flops_per_device": float(cost.get("flops", -1.0)),
+        "bytes_per_device": float(cost.get("bytes accessed", -1.0)),
+        "collective_bytes_per_device": coll,
+        "memory": _mem_dict(mem),
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+    })
+    if verbose:
+        mb = rec["memory"].get("temp_size_in_bytes", 0) / 1e9
+        ab = rec["memory"].get("argument_size_in_bytes", 0) / 1e9
+        print(f"[dryrun] {arch} x {shape_name} ({rec['mesh']}): OK  "
+              f"flops/dev={rec['flops_per_device']:.3e}  "
+              f"temp={mb:.2f}GB args={ab:.2f}GB  "
+              f"coll={ {k: round(v/1e6,1) for k,v in coll.items()} }MB  "
+              f"compile={rec['compile_s']}s")
+    return rec
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None)
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--both-meshes", action="store_true")
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--out", default=None)
+    args = p.parse_args(argv)
+
+    cells = []
+    if args.all:
+        for arch in list_archs():
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    records = []
+    failures = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            try:
+                records.append(run_cell(arch, shape, multi_pod=mp))
+            except Exception as e:  # noqa: BLE001 — report and continue
+                failures += 1
+                print(f"[dryrun] {arch} x {shape} "
+                      f"({'2x16x16' if mp else '16x16'}): FAIL {e!r}")
+                records.append({"arch": arch, "shape": shape,
+                                "mesh": "2x16x16" if mp else "16x16",
+                                "status": f"FAIL: {e}"})
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"[dryrun] wrote {len(records)} records -> {args.out}")
+    print(f"[dryrun] {len(records) - failures}/{len(records)} cells ok")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,381 @@
+"""Step builders for train / prefill / decode across all (arch x shape)
+cells: abstract inputs (ShapeDtypeStruct — never allocated), sharding
+trees, and the jit-able step functions the dry-run lowers.
+
+Train cells lower the MPSL step (the paper's technique IS the training
+step); decode/prefill cells lower serving of the assembled model
+(post-training construction, paper Sec. 3.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import MPSLConfig, RunConfig, ShapeConfig
+from repro.core import mpsl, split
+from repro.models import layers, model as M
+from repro.optim import adamw_init, schedules
+from repro.parallel import sharding
+
+VLM_PATCH_TOKENS = 256
+# Per-device activation-stash budget for the microbatch heuristic. The
+# measured temp footprint runs ~3-4x the naive L*B*S*D*2 stash estimate
+# (backward-pass transients), so the target is set conservatively; the
+# dry-run's memory_analysis is the ground truth.
+STASH_TARGET_BYTES = 1.5e9
+
+
+# ---------------------------------------------------------------------------
+# Run defaults per cell
+
+
+def n_data_shards(mesh) -> int:
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n *= int(mesh.shape[a])
+    return n
+
+
+def choose_microbatches(cfg, shape, n_shards: int, bn: int) -> int:
+    """Smallest power-of-two microbatch count keeping the per-device
+    activation stash (L x B_local x S_eff x D x 2B, bf16 scan carries)
+    under budget. Capped at Bn (we split each client's local batch).
+    Encoder-decoder archs pay for encoder + cross-attention tokens too."""
+    seq_eff = shape.seq_len + 2 * cfg.encoder_seq
+    layers_eff = cfg.num_layers + cfg.encoder_layers
+    mu = 1
+    while mu < bn:
+        local_batch = max(1, shape.global_batch // mu // n_shards)
+        stash = layers_eff * local_batch * seq_eff * cfg.d_model * 2
+        if stash <= STASH_TARGET_BYTES:
+            break
+        mu *= 2
+    return mu
+
+
+def default_run(cfg, shape, mesh, **overrides) -> RunConfig:
+    n_shards = n_data_shards(mesh)
+    n_clients = n_shards                       # one client group per shard
+    bn = max(1, shape.global_batch // n_clients)
+    mu = choose_microbatches(cfg, shape, n_shards, bn) \
+        if shape.is_training else 1
+    mp = MPSLConfig(
+        n_clients=n_clients,
+        # the paper fine-tunes a suffix of the encoder (Table 4); last
+        # half, capped so optimizer state fits the largest archs
+        trainable_blocks=max(1, min(cfg.num_layers // 2, 24)),
+    )
+    kw: Dict[str, Any] = dict(
+        model=cfg, shape=shape, mpsl=mp,
+        multi_pod="pod" in mesh.axis_names,
+        microbatches=mu,
+        attn_impl="blockwise" if shape.seq_len > 2048 else "auto",
+        # sequence-parallel activation stash for the widest models (the
+        # remat carry dominates their footprint)
+        seq_shard_acts=bool(shape.is_training and cfg.d_model >= 8192),
+        # serving uses the expert-parallel dispatch (adopted production
+        # path, EXPERIMENTS.md §Perf); training default stays dense
+        # (paper-faithful baseline)
+        moe_impl="ep" if (cfg.moe and not shape.is_training
+                          and cfg.moe.num_experts % 16 == 0) else "dense",
+    )
+    mp_over = {k: v for k, v in overrides.items()
+               if k in {f.name for f in dataclasses.fields(MPSLConfig)}}
+    if mp_over:
+        kw["mpsl"] = dataclasses.replace(mp, **mp_over)
+    kw.update({k: v for k, v in overrides.items() if k not in mp_over})
+    return RunConfig(**kw)
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def train_batch_specs(cfg, run) -> Dict[str, jax.ShapeDtypeStruct]:
+    shape = run.shape
+    n = run.mpsl.n_clients
+    bn = shape.global_batch // n
+    s = shape.seq_len
+    batch = {"mask": _sds((n,), "float32")}
+    if cfg.family == "vlm":
+        s_text = s - VLM_PATCH_TOKENS
+        batch["tokens"] = _sds((n, bn, s_text), "int32")
+        batch["labels"] = _sds((n, bn, s_text), "int32")
+        batch["patch_embeds"] = _sds((n, bn, VLM_PATCH_TOKENS, cfg.d_model),
+                                     run.compute_dtype)
+    elif cfg.family == "audio":
+        batch["tokens"] = _sds((n, bn, s), "int32")
+        batch["labels"] = _sds((n, bn, s), "int32")
+        batch["frame_embeds"] = _sds((n, bn, cfg.encoder_seq, cfg.d_model),
+                                     run.compute_dtype)
+    else:
+        batch["tokens"] = _sds((n, bn, s), "int32")
+        batch["labels"] = _sds((n, bn, s), "int32")
+    return batch
+
+
+def _batch_dims(name: str, ndim: int):
+    if name == "mask":
+        return ("client",)
+    return ("client",) + (None,) * (ndim - 1)
+
+
+def batch_shardings(batch, mesh):
+    return {k: NamedSharding(mesh, sharding.resolve_spec(
+        mesh, v.shape, _batch_dims(k, len(v.shape)))) for k, v in batch.items()}
+
+
+def abstract_train_state(cfg, run):
+    key = jax.random.PRNGKey(0)
+
+    def init(k):
+        params, frozen, _plan = split.init_mpsl_lm(k, cfg, run)
+        return params, frozen
+
+    params, frozen = jax.eval_shape(init, key)
+    opt = jax.eval_shape(adamw_init, params)
+    return {
+        "params": params,
+        "frozen": frozen,
+        "opt": opt,
+        "step": _sds((), "int32"),
+        "rng": jax.eval_shape(lambda: jax.random.PRNGKey(0)),
+    }
+
+
+def state_shardings(abstract_state, mesh):
+    repl = NamedSharding(mesh, P())
+    out = {
+        "params": sharding.param_shardings(abstract_state["params"], mesh),
+        "frozen": sharding.param_shardings(abstract_state["frozen"], mesh),
+        "opt": {
+            "mu": sharding.param_shardings(abstract_state["opt"]["mu"], mesh),
+            "nu": sharding.param_shardings(abstract_state["opt"]["nu"], mesh),
+            "count": repl,
+        },
+        "step": repl,
+        "rng": repl,
+    }
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Train step (MPSL)
+
+
+def build_train(cfg, run, mesh):
+    """Returns (step_fn, abstract_state, abstract_batch, in_shardings)."""
+    loss_fn = mpsl.make_lm_loss(cfg, run)
+    sched = schedules.warmup_cosine(run.learning_rate, 100, 10_000)
+    step_fn = mpsl.make_train_step(loss_fn, run, sched,
+                                   backward_mode=run.mpsl.backward_mode,
+                                   microbatches=run.microbatches)
+    a_state = abstract_train_state(cfg, run)
+    a_batch = train_batch_specs(cfg, run)
+    in_sh = (state_shardings(a_state, mesh), batch_shardings(a_batch, mesh))
+    return step_fn, a_state, a_batch, in_sh
+
+
+# ---------------------------------------------------------------------------
+# Serving (assembled model)
+
+
+def abstract_serve_params(cfg, dtype="bfloat16"):
+    params = jax.eval_shape(lambda k: M.init_lm(k, cfg),
+                            jax.random.PRNGKey(0))
+    dt = jnp.dtype(dtype)
+    return jax.tree_util.tree_map(
+        lambda l: jax.ShapeDtypeStruct(
+            l.shape, dt if jnp.issubdtype(l.dtype, jnp.floating) else l.dtype),
+        params)
+
+
+def _hybrid_cache_len(cfg, seg: M.Segment, cache_len: int) -> int:
+    if seg.kind.family == "hybrid" and not seg.kind.is_global \
+            and cfg.sliding_window:
+        return min(cfg.sliding_window, cache_len)
+    return cache_len
+
+
+def abstract_serve_cache(cfg, batch: int, cache_len: int,
+                         dtype="bfloat16"):
+    return jax.eval_shape(
+        lambda: M.init_body_cache(cfg, batch, cache_len, jnp.dtype(dtype)))
+
+
+def abstract_cross_kv(cfg, batch: int, dtype="bfloat16"):
+    if not cfg.encoder_layers:
+        return None
+    k, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    out = []
+    for seg in M.body_segments(cfg):
+        if not seg.kind.cross:
+            out.append(None)
+            continue
+        out.append({
+            "k": _sds((seg.count, batch, cfg.encoder_seq, k, hd), dtype),
+            "v": _sds((seg.count, batch, cfg.encoder_seq, k, hd), dtype),
+            "pos": _sds((seg.count, batch, cfg.encoder_seq), "int32"),
+        })
+    return out
+
+
+def cross_kv_shardings(a_ckv, mesh):
+    if a_ckv is None:
+        return None
+
+    def rule(leaf):
+        # [L, B, S_enc, K, hd] — batch on dim 1
+        dims = (None, "batch") + (None,) * (len(leaf.shape) - 2)
+        return NamedSharding(mesh,
+                             sharding.resolve_spec(mesh, leaf.shape, dims))
+    return jax.tree_util.tree_map(rule, a_ckv)
+
+
+def serve_cache_shardings(a_cache, mesh, cfg=None):
+    kv_heads = cfg.num_kv_heads if cfg is not None else None
+
+    def rule(key_path, leaf):
+        path = sharding._path_names(key_path)
+        shape = tuple(leaf.shape)
+        with sharding.use_mesh(mesh):
+            spec = sharding.resolve_spec(
+                mesh, shape, sharding.cache_dims(shape, path[-1],
+                                                 stacked=True,
+                                                 kv_heads=kv_heads))
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(rule, a_cache)
+
+
+def build_decode(cfg, run, mesh):
+    """One-token decode step with a seq_len KV/SSM cache."""
+    shape = run.shape
+    b = shape.global_batch
+    cache_len = shape.seq_len
+    cdt = jnp.dtype(run.compute_dtype)
+    impls = dict(run.impls)
+
+    def decode_fn(params, cache, cross_kv, tokens, positions):
+        flat_pos = positions[:, 0] if positions.ndim == 3 else positions
+        h = M.embed_tokens(params, tokens, cfg, positions=flat_pos,
+                           dtype=cdt)
+        h, cache, _ = M.forward_body(
+            params, h, cfg, positions=positions, cache=cache,
+            cross_kv=cross_kv, impls=impls, remat=False)
+        logits = M.lm_logits(params, h, cfg)
+        return logits, cache
+
+    a_params = abstract_serve_params(cfg, run.compute_dtype)
+    param_sh = sharding.param_shardings(a_params, mesh)
+    if not run.serve_weights_fsdp:
+        param_sh = _drop_fsdp(param_sh, mesh)
+    a_cache = abstract_serve_cache(cfg, b, cache_len, run.compute_dtype)
+    a_ckv = abstract_cross_kv(cfg, b, run.compute_dtype)
+    if cfg.pos_embed == "mrope":
+        a_pos = _sds((b, 3, 1), "int32")
+    else:
+        a_pos = _sds((b, 1), "int32")
+    a_tok = _sds((b, 1), "int32")
+    cache_sh = serve_cache_shardings(a_cache, mesh, cfg)
+    with sharding.use_mesh(mesh):
+        logits_sh = NamedSharding(mesh, sharding.resolve_spec(
+            mesh, (b, 1, cfg.vocab_size), ("batch", None, "model")))
+    in_sh = (param_sh,
+             cache_sh,
+             cross_kv_shardings(a_ckv, mesh),
+             NamedSharding(mesh, sharding.resolve_spec(
+                 mesh, a_tok.shape, ("batch", None))),
+             NamedSharding(mesh, sharding.resolve_spec(
+                 mesh, a_pos.shape, ("batch",) + (None,) *
+                 (len(a_pos.shape) - 1))))
+    # matching output shardings let the donated cache alias its input
+    out_sh = (logits_sh, cache_sh)
+    args = (a_params, a_cache, a_ckv, a_tok, a_pos)
+    return decode_fn, args, in_sh, out_sh
+
+
+def build_prefill(cfg, run, mesh):
+    """Full-sequence prefill producing the populated cache + last logits."""
+    shape = run.shape
+    b = shape.global_batch
+    s = shape.seq_len
+    cdt = jnp.dtype(run.compute_dtype)
+    impls = dict(run.impls)
+    a_cache = abstract_serve_cache(cfg, b, s, run.compute_dtype)
+    cache_sh = serve_cache_shardings(a_cache, mesh, cfg)
+
+    def prefill_fn(params, batch):
+        if cfg.family == "vlm":
+            s_text = s - VLM_PATCH_TOKENS
+            h_text = M.embed_tokens(params, batch["tokens"], cfg, dtype=cdt)
+            h = jnp.concatenate(
+                [batch["patch_embeds"].astype(cdt), h_text], axis=1)
+            positions = mpsl._build_positions(cfg, batch, b, s)
+        else:
+            h = M.embed_tokens(params, batch["tokens"], cfg, dtype=cdt)
+            positions = layers.positions_from_shape(b, s)
+        enc_out, cross_kv = None, None
+        if cfg.family == "audio":
+            enc_out = M.run_encoder(params, batch["frame_embeds"].astype(cdt),
+                                    cfg, impls=impls, remat=False)
+            cross_kv = M.compute_cross_kv_stacked(params, enc_out, cfg)
+        cache = M.init_body_cache(cfg, b, s, cdt)
+        h, cache, _ = M.forward_body(
+            params, h, cfg, positions=positions, cache=cache,
+            cross_kv=cross_kv, impls=impls, remat=False)
+        logits = M.lm_logits(params, h[:, -1:], cfg)
+        cache = jax.lax.with_sharding_constraint(cache, cache_sh)
+        return logits, cache
+
+    a_params = abstract_serve_params(cfg, run.compute_dtype)
+    batch: Dict[str, Any] = {}
+    if cfg.family == "vlm":
+        batch["tokens"] = _sds((b, s - VLM_PATCH_TOKENS), "int32")
+        batch["patch_embeds"] = _sds((b, VLM_PATCH_TOKENS, cfg.d_model),
+                                     run.compute_dtype)
+    else:
+        batch["tokens"] = _sds((b, s), "int32")
+        if cfg.family == "audio":
+            batch["frame_embeds"] = _sds((b, cfg.encoder_seq, cfg.d_model),
+                                         run.compute_dtype)
+    in_sh = (sharding.param_shardings(a_params, mesh),
+             batch_shardings_2d(batch, mesh))
+    return prefill_fn, (a_params, batch), in_sh
+
+
+def _drop_fsdp(shardings, mesh):
+    """Replicate weights over the data axis (TP-only serving layout):
+    removes the per-step FSDP weight all-gathers at the cost of holding
+    the TP shard on every data row. Use when params_bf16/TP fit HBM."""
+    def fix(ns):
+        spec = tuple(ns.spec)
+        new = []
+        for entry in spec:
+            if entry is None:
+                new.append(None)
+            elif entry == "data" or entry == ("data",):
+                new.append(None)
+            elif isinstance(entry, tuple):
+                kept = tuple(a for a in entry if a != "data")
+                new.append(kept if kept else None)
+            else:
+                new.append(entry)
+        return NamedSharding(mesh, P(*new))
+    return jax.tree_util.tree_map(fix, shardings)
+
+
+def batch_shardings_2d(batch, mesh):
+    return {k: NamedSharding(mesh, sharding.resolve_spec(
+        mesh, v.shape, ("batch",) + (None,) * (len(v.shape) - 1)))
+        for k, v in batch.items()}

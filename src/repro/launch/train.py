@@ -1,0 +1,95 @@
+"""MPSL training driver.
+
+  PYTHONPATH=src python -m repro.launch.train --arch minitron-4b \
+      --steps 50 --reduced --ckpt-dir /tmp/ckpt
+
+Full-size configs target the production mesh (use dryrun.py for those);
+--reduced trains the same-family small config end-to-end on host devices
+(this is what CI / the examples use).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import (MPSLConfig, RunConfig, SHAPES, get_config, reduced)
+from repro.core import mpsl, split
+from repro.data import ClientLoader, SyntheticLM, dirichlet_partition
+from repro.launch import mesh as mesh_lib
+from repro.optim import schedules
+from repro.parallel import sharding
+from repro.train import Trainer, TrainerConfig
+
+
+def make_lm_loader(cfg, n_clients: int, bn: int, seq: int, seed: int = 0,
+                   drop_prob: float = 0.0):
+    ds = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=seq, size=4096,
+                     seed=seed)
+    shards = dirichlet_partition(ds.labels, n_clients, alpha=0.1, seed=seed,
+                                 min_per_client=bn)
+
+    base = ClientLoader(ds, shards, bn, seed=seed, drop_prob=drop_prob)
+
+    class LMWrapper:
+        def batch(self, step):
+            b = base.batch(step)
+            return {"tokens": b["tokens"].astype(np.int32),
+                    "labels": b["labels"].astype(np.int32),
+                    "mask": b["mask"]}
+
+    return LMWrapper()
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="minitron-4b")
+    p.add_argument("--steps", type=int, default=50)
+    p.add_argument("--reduced", action="store_true", default=True)
+    p.add_argument("--full", dest="reduced", action="store_false")
+    p.add_argument("--n-clients", type=int, default=4)
+    p.add_argument("--batch-per-client", type=int, default=2)
+    p.add_argument("--seq", type=int, default=128)
+    p.add_argument("--lr", type=float, default=3e-4)
+    p.add_argument("--trainable-blocks", type=int, default=-1)
+    p.add_argument("--drop-prob", type=float, default=0.0)
+    p.add_argument("--compress", action="store_true")
+    p.add_argument("--ckpt-dir", default=None)
+    p.add_argument("--ckpt-every", type=int, default=25)
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    mp = MPSLConfig(n_clients=args.n_clients,
+                    trainable_blocks=args.trainable_blocks,
+                    compress_uplink=args.compress,
+                    compress_downlink=args.compress)
+    run = RunConfig(model=cfg, shape=SHAPES["train_4k"], mpsl=mp,
+                    compute_dtype="float32", learning_rate=args.lr,
+                    seed=args.seed)
+
+    key = jax.random.PRNGKey(args.seed)
+    params, frozen, plan = split.init_mpsl_lm(key, cfg, run)
+    state = mpsl.init_state(params, frozen, args.seed)
+    loss_fn = mpsl.make_lm_loss(cfg, run)
+    sched = schedules.warmup_cosine(args.lr, 10, args.steps)
+    step_fn = jax.jit(mpsl.make_train_step(loss_fn, run, sched))
+
+    loader = make_lm_loader(cfg, args.n_clients, args.batch_per_client,
+                            args.seq, args.seed, args.drop_prob)
+    trainer = Trainer(step_fn, state, loader,
+                      TrainerConfig(total_steps=args.steps,
+                                    ckpt_every=args.ckpt_every,
+                                    ckpt_dir=args.ckpt_dir))
+    result = trainer.run()
+    print(f"[train] done: final loss {result['final_loss']:.4f}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

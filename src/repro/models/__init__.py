@@ -1,0 +1,1 @@
+"""Model zoo: layers, attention, MLP/MoE/Mamba/hybrid blocks, assembly."""

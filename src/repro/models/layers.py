@@ -1,0 +1,150 @@
+"""Shared low-level layers: norms, activations, RoPE / M-RoPE, init helpers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Init helpers
+
+
+def dense_init(key, shape, in_axis_size=None, dtype=jnp.float32):
+    """Truncated-normal fan-in init (matches common transformer practice)."""
+    if in_axis_size is None:
+        in_axis_size = shape[0]
+    std = 1.0 / np.sqrt(max(1, in_axis_size))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def zeros_init(_key, shape, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(_key, shape, dtype=jnp.float32):
+    return jnp.ones(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms (computed in f32, cast back to input dtype)
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    """scale is stored as the deviation from 1 (zeros init => identity)."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mean) * jax.lax.rsqrt(var + eps)
+    y = y * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def apply_norm(x, params, kind: str, eps: float = 1e-6):
+    if kind == "rmsnorm":
+        return rms_norm(x, params["scale"], eps)
+    if kind == "layernorm":
+        return layer_norm(x, params["scale"], params["bias"], eps)
+    raise ValueError(f"unknown norm {kind!r}")
+
+
+def init_norm(kind: str, d: int):
+    if kind == "rmsnorm":
+        # stored as (scale - 1) so a zeros-init is identity-ish; see rms_norm
+        return {"scale": jnp.zeros((d,), jnp.float32)}
+    if kind == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32),
+                "bias": jnp.zeros((d,), jnp.float32)}
+    raise ValueError(f"unknown norm {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# Activations
+
+
+def sq_relu(x):
+    r = jax.nn.relu(x)
+    return r * r
+
+
+ACTIVATIONS = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "sq_relu": sq_relu,
+    "relu": jax.nn.relu,
+}
+
+
+def act_fn(name: str):
+    return ACTIVATIONS[name]
+
+
+def gated_activation(name: str) -> bool:
+    """silu family uses a gated (SwiGLU) MLP; gelu / sq_relu are plain."""
+    return name == "silu"
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+
+
+def rope_cos_sin(positions, head_dim: int, theta: float):
+    """positions [..., S] (int) -> cos, sin [..., S, head_dim/2] (f32)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x, cos, sin):
+    """x [..., S, H, hd]; cos/sin [..., S, hd/2] broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :].astype(x.dtype)
+    s = sin[..., None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def mrope_cos_sin(positions3, head_dim: int, theta: float, sections):
+    """M-RoPE (Qwen2-VL): positions3 [B, 3, S] (t, h, w grids).
+
+    The head_dim/2 rotary frequencies are split into `sections`
+    (sum(sections) == head_dim/2); section i takes its angle from
+    positions3[:, i]. Returns cos/sin [B, S, head_dim/2]."""
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    # angles per position-kind: [B, 3, S, half]
+    ang = positions3.astype(jnp.float32)[..., None] * freqs
+    parts = []
+    start = 0
+    for i, sec in enumerate(sections):
+        parts.append(ang[:, i, :, start:start + sec])
+        start += sec
+    angles = jnp.concatenate(parts, axis=-1)          # [B, S, half]
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def positions_from_shape(batch, seq, offset=0):
+    return jnp.arange(seq, dtype=jnp.int32)[None, :] + offset \
+        + jnp.zeros((batch, 1), jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Dtype helpers
+
+
+def cast_tree(tree, dtype):
+    return jax.tree_util.tree_map(
+        lambda a: a.astype(dtype) if jnp.issubdtype(a.dtype, jnp.floating)
+        else a, tree)

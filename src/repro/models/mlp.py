@@ -1,0 +1,30 @@
+"""Feed-forward blocks: gated (SwiGLU) for silu-family, plain for
+gelu / squared-ReLU (Nemotron) families."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def init_mlp(key, d_model: int, d_ff: int, activation: str):
+    ks = jax.random.split(key, 3)
+    p = {
+        "wi": layers.dense_init(ks[0], (d_model, d_ff)),
+        "wo": layers.dense_init(ks[1], (d_ff, d_model)),
+    }
+    if layers.gated_activation(activation):
+        p["wg"] = layers.dense_init(ks[2], (d_model, d_ff))
+    return p
+
+
+def apply_mlp(params, x, activation: str):
+    act = layers.act_fn(activation)
+    h = jnp.einsum("bsd,df->bsf", x, params["wi"].astype(x.dtype))
+    if "wg" in params:
+        g = jnp.einsum("bsd,df->bsf", x, params["wg"].astype(x.dtype))
+        h = act(g) * h
+    else:
+        h = act(h)
+    return jnp.einsum("bsf,fd->bsd", h, params["wo"].astype(x.dtype))

@@ -1,0 +1,428 @@
+"""Model assembly: init + forward for every assigned architecture family.
+
+The transformer body is represented as a list of SEGMENTS — runs of
+consecutive layers with identical static structure — each stored as a
+stacked pytree (leading layer axis) and executed with jax.lax.scan.
+Homogeneous archs have one segment; Hymba splits at its global-attention
+layers; Whisper has separate encoder and decoder stacks. Scan-over-layers
+keeps compile time flat in depth (94-layer qwen3 compiles like 2 layers)
+and jax.checkpoint around the scanned step gives per-block remat.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, hybrid, layers, mamba, mlp, moe
+from repro.parallel import sharding
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockKind:
+    family: str                 # dense | moe | ssm | hybrid | vit | enc | dec
+    is_global: bool = True      # full vs sliding-window attention
+    causal: bool = True
+    cross: bool = False         # cross-attention (whisper decoder)
+
+    @property
+    def has_attn(self) -> bool:
+        return self.family in ("dense", "moe", "vit", "enc", "dec")
+
+    @property
+    def has_mlp(self) -> bool:
+        return self.family != "ssm"
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    kind: BlockKind
+    count: int
+
+
+def body_segments(cfg) -> List[Segment]:
+    """Static segment plan for the (decoder-side) body."""
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        return [Segment(BlockKind("dense"), cfg.num_layers)]
+    if fam == "moe":
+        return [Segment(BlockKind("moe"), cfg.num_layers)]
+    if fam == "ssm":
+        return [Segment(BlockKind("ssm"), cfg.num_layers)]
+    if fam == "hybrid":
+        segs, i = [], 0
+        glb = set(cfg.global_layers)
+        while i < cfg.num_layers:
+            g = i in glb
+            j = i
+            while j < cfg.num_layers and (j in glb) == g:
+                j += 1
+            segs.append(Segment(BlockKind("hybrid", is_global=g), j - i))
+            i = j
+        return segs
+    if fam == "vit":
+        return [Segment(BlockKind("vit", causal=False), cfg.num_layers)]
+    if fam == "audio":
+        return [Segment(BlockKind("dec", cross=True), cfg.num_layers)]
+    raise ValueError(f"unknown family {fam!r}")
+
+
+def encoder_segments(cfg) -> List[Segment]:
+    if cfg.encoder_layers:
+        return [Segment(BlockKind("enc", causal=False), cfg.encoder_layers)]
+    return []
+
+
+# ---------------------------------------------------------------------------
+# Block init / apply
+
+
+def init_block(key, cfg, kind: BlockKind):
+    ks = jax.random.split(key, 6)
+    p: Dict[str, Any] = {"norm1": layers.init_norm(cfg.norm, cfg.d_model)}
+    if kind.family == "ssm":
+        p["ssm"] = mamba.init_mamba(ks[0], cfg)
+        return p
+    if kind.family == "hybrid":
+        p["mix"] = hybrid.init_hybrid(ks[0], cfg)
+    else:
+        p["attn"] = attention.init_attention(ks[0], cfg)
+    if kind.cross:
+        p["norm_cross"] = layers.init_norm(cfg.norm, cfg.d_model)
+        p["cross"] = attention.init_attention(ks[1], cfg)
+    p["norm2"] = layers.init_norm(cfg.norm, cfg.d_model)
+    if cfg.moe and kind.family == "moe":
+        p["moe"] = moe.init_moe(ks[2], cfg)
+    else:
+        p["mlp"] = mlp.init_mlp(ks[3], cfg.d_model, cfg.d_ff, cfg.activation)
+    return p
+
+
+def apply_block(params, x, cfg, kind: BlockKind, *, positions, cache=None,
+                enc_out=None, cross_kv=None, impls=None):
+    """One transformer block. Returns (x, new_cache, aux_loss)."""
+    impls = impls or {}
+    aux = jnp.zeros((), jnp.float32)
+    h = layers.apply_norm(x, params["norm1"], cfg.norm)
+
+    new_cache = None
+    if kind.family == "ssm":
+        out, new_cache = mamba.apply_mamba(
+            params["ssm"], h, cfg, cache=cache,
+            impl=impls.get("ssm", "jnp"), chunk=impls.get("ssm_chunk", 256))
+        return x + out, new_cache, aux
+    if kind.family == "hybrid":
+        out, new_cache = hybrid.apply_hybrid(
+            params["mix"], h, cfg, positions=positions,
+            is_global=kind.is_global, cache=cache,
+            impl=impls.get("attn", "auto"), ssm_impl=impls.get("ssm", "jnp"),
+            seq_shard=impls.get("attn_seq_shard", False))
+        x = x + out
+    else:
+        window = 0 if kind.is_global else cfg.sliding_window
+        out, new_cache = attention.apply_attention(
+            params["attn"], h, cfg, positions=positions, causal=kind.causal,
+            window=window, cache=cache, impl=impls.get("attn", "auto"),
+            block=impls.get("attn_block", 1024),
+            seq_shard=impls.get("attn_seq_shard", False))
+        x = x + out
+
+    if kind.cross:
+        h = layers.apply_norm(x, params["norm_cross"], cfg.norm)
+        if cross_kv is not None:
+            out, _ = attention.apply_attention(
+                params["cross"], h, cfg, positions=positions, causal=False,
+                precomputed_kv=cross_kv, impl=impls.get("attn", "auto"),
+                use_rope=False)
+        else:
+            out, _ = attention.apply_attention(
+                params["cross"], h, cfg, positions=positions, causal=False,
+                kv_x=enc_out, impl=impls.get("attn", "auto"), use_rope=False)
+        x = x + out
+
+    h = layers.apply_norm(x, params["norm2"], cfg.norm)
+    if "moe" in params:
+        out, aux = moe.apply_moe(params["moe"], h, cfg,
+                                 impl=impls.get("moe", "dense"),
+                                 capacity=impls.get("moe_capacity", 2.0))
+    else:
+        out = mlp.apply_mlp(params["mlp"], h, cfg.activation)
+    x = x + out
+    x = sharding.shard_act(x, impls.get("act_dims", ("batch", None, None)))
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Segment init / scan
+
+
+def init_segment(key, cfg, seg: Segment):
+    keys = jax.random.split(key, seg.count)
+    return jax.vmap(lambda k: init_block(k, cfg, seg.kind))(keys)
+
+
+def init_segment_cache(cfg, seg: Segment, batch: int, cache_len: int,
+                       dtype=jnp.bfloat16):
+    kind = seg.kind
+    if kind.family == "ssm":
+        return mamba.init_mamba_cache(cfg, batch, layer_count=seg.count,
+                                      dtype=dtype)
+    if kind.family == "hybrid":
+        win = cache_len if kind.is_global else \
+            min(cfg.sliding_window, cache_len)
+        return {
+            "kv": attention.init_cache(cfg, batch, win, dtype, seg.count),
+            "ssm": mamba.init_mamba_cache(cfg, batch, layer_count=seg.count,
+                                          dtype=dtype),
+        }
+    return attention.init_cache(cfg, batch, cache_len, dtype, seg.count)
+
+
+def apply_segment(params, x, cfg, seg: Segment, *, positions, cache=None,
+                  enc_out=None, cross_kv=None, impls=None, remat=True):
+    """Scan a stacked segment. Returns (x, new_cache, aux_sum).
+
+    Train path (no cache): layer params are scan xs. Serve path: the
+    stacked cache is a scan CARRY updated in place with dynamic-update-
+    slice on the layer dim — the while loop then aliases the buffer
+    instead of allocating a second stacked cache as scan outputs would."""
+
+    # unroll_layers: used by the roofline probes so HLO cost analysis sees
+    # every layer (XLA counts a while-loop body once regardless of trips)
+    unroll = bool((impls or {}).get("unroll_layers", False))
+
+    if cache is None:
+        def step(carry, xs):
+            h, aux = carry
+            lp, ckv = xs
+            y, _, a = apply_block(lp, h, cfg, seg.kind, positions=positions,
+                                  enc_out=enc_out, cross_kv=ckv,
+                                  impls=impls)
+            return (y, aux + a), None
+
+        if remat:
+            step = jax.checkpoint(
+                step, policy=jax.checkpoint_policies.nothing_saveable)
+        (x, aux), _ = jax.lax.scan(
+            step, (x, jnp.zeros((), jnp.float32)), (params, cross_kv),
+            unroll=seg.count if unroll else 1)
+        return x, None, aux
+
+    tmap = jax.tree_util.tree_map
+
+    def step_cached(carry, xs):
+        h, aux, c, i = carry
+        lp, ckv = xs
+        lc = tmap(lambda a: jax.lax.dynamic_index_in_dim(
+            a, i, 0, keepdims=False), c)
+        y, nc, a = apply_block(lp, h, cfg, seg.kind, positions=positions,
+                               cache=lc, enc_out=enc_out, cross_kv=ckv,
+                               impls=impls)
+        c = tmap(lambda buf, new: jax.lax.dynamic_update_index_in_dim(
+            buf, new.astype(buf.dtype), i, 0), c, nc)
+        return (y, aux + a, c, i + 1), None
+
+    (x, aux, new_cache, _), _ = jax.lax.scan(
+        step_cached,
+        (x, jnp.zeros((), jnp.float32), cache, jnp.zeros((), jnp.int32)),
+        (params, cross_kv),
+        unroll=seg.count if unroll else 1)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init
+
+
+def init_lm(key, cfg):
+    """Full model params: embed + body segments (+ encoder) + final norm + head."""
+    ks = jax.random.split(key, 8)
+    params: Dict[str, Any] = {}
+    embed: Dict[str, Any] = {
+        "table": layers.dense_init(ks[0], (cfg.vocab_size, cfg.d_model),
+                                   in_axis_size=cfg.d_model)}
+    if cfg.pos_embed == "learned":
+        embed["pos"] = layers.dense_init(
+            ks[1], (cfg.max_seq, cfg.d_model), in_axis_size=cfg.d_model)
+    params["embed"] = embed
+
+    segs = body_segments(cfg)
+    seg_keys = jax.random.split(ks[2], len(segs))
+    params["segments"] = [init_segment(k, cfg, s)
+                          for k, s in zip(seg_keys, segs)]
+    params["final_norm"] = layers.init_norm(cfg.norm, cfg.d_model)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.dense_init(
+            ks[3], (cfg.d_model, cfg.vocab_size))
+
+    enc_segs = encoder_segments(cfg)
+    if enc_segs:
+        ek = jax.random.split(ks[4], len(enc_segs))
+        params["encoder"] = {
+            "segments": [init_segment(k, cfg, s)
+                         for k, s in zip(ek, enc_segs)],
+            "norm": layers.init_norm(cfg.norm, cfg.d_model),
+            "pos": layers.dense_init(ks[5], (cfg.encoder_seq, cfg.d_model),
+                                     in_axis_size=cfg.d_model),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+
+
+def embed_tokens(params, tokens, cfg, positions=None, dtype=jnp.bfloat16):
+    """Token ids [B, S] -> embeddings [B, S, D]."""
+    h = params["embed"]["table"].astype(dtype)[tokens]
+    if cfg.pos_embed == "learned":
+        pos = positions if positions is not None else \
+            layers.positions_from_shape(tokens.shape[0], tokens.shape[1])
+        h = h + params["embed"]["pos"].astype(dtype)[pos]
+    return sharding.shard_act(h, ("batch", None, None))
+
+
+def run_encoder(params, frame_embeds, cfg, impls=None, remat=True):
+    """Whisper encoder over precomputed (stub) frame embeddings."""
+    enc = params["encoder"]
+    h = frame_embeds + enc["pos"].astype(frame_embeds.dtype)[None]
+    positions = layers.positions_from_shape(h.shape[0], h.shape[1])
+    for seg_params, seg in zip(enc["segments"], encoder_segments(cfg)):
+        h, _, _ = apply_segment(seg_params, h, cfg, seg, positions=positions,
+                                impls=impls, remat=remat)
+    return layers.apply_norm(h, enc["norm"], cfg.norm)
+
+
+def forward_body(params, h, cfg, *, positions, cache=None, enc_out=None,
+                 cross_kv=None, impls=None, remat=True):
+    """Embeddings -> final hidden states. Returns (h, new_caches, aux)."""
+    segs = body_segments(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches: Optional[List[Any]] = [] if cache is not None else None
+    for i, (seg_params, seg) in enumerate(zip(params["segments"], segs)):
+        seg_cache = cache[i] if cache is not None else None
+        seg_ckv = cross_kv[i] if cross_kv is not None else None
+        h, nc, aux = apply_segment(
+            seg_params, h, cfg, seg, positions=positions, cache=seg_cache,
+            enc_out=enc_out, cross_kv=seg_ckv, impls=impls, remat=remat)
+        if new_caches is not None:
+            new_caches.append(nc)
+        aux_total = aux_total + aux
+    h = layers.apply_norm(h, params["final_norm"], cfg.norm)
+    return h, new_caches, aux_total
+
+
+def lm_logits(params, h, cfg):
+    # Tied archs may carry an explicitly trained head (MPSL fine-tuning
+    # keeps the embedding frozen client-side but trains the tail copy).
+    if "lm_head" in params:
+        w = params["lm_head"]
+    else:
+        w = params["embed"]["table"].T
+    logits = jnp.einsum("bsd,dv->bsv", h, w.astype(h.dtype))
+    return sharding.shard_act(logits, ("batch", None, "model"))
+
+
+def init_body_cache(cfg, batch: int, cache_len: int, dtype=jnp.bfloat16):
+    return [init_segment_cache(cfg, seg, batch, cache_len, dtype)
+            for seg in body_segments(cfg)]
+
+
+def compute_cross_kv_stacked(params, enc_out, cfg):
+    """Per-decoder-layer cross K/V, stacked along the layer axis."""
+    out = []
+    for seg_params, seg in zip(params["segments"], body_segments(cfg)):
+        if not seg.kind.cross:
+            out.append(None)
+            continue
+        ckv = jax.vmap(
+            lambda p: attention.compute_cross_kv(p["cross"], enc_out, cfg)
+        )(seg_params)
+        out.append(ckv)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Analytic parameter counts
+
+
+def _attn_params(cfg) -> int:
+    d, h, k, hd = (cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                   cfg.resolved_head_dim)
+    n = d * h * hd + 2 * d * k * hd + h * hd * d
+    if cfg.qkv_bias:
+        n += (h + 2 * k) * hd
+    if cfg.qk_norm:
+        n += 2 * hd
+    return n
+
+
+def _mlp_params(d, f, activation) -> int:
+    return d * f * (3 if layers.gated_activation(activation) else 2)
+
+
+def _mamba_params(cfg) -> int:
+    d = cfg.d_model
+    di, ds, dc = cfg.d_inner, cfg.ssm.d_state, cfg.ssm.d_conv
+    dtr = cfg.dt_rank
+    return (d * 2 * di + dc * di + di + di * (dtr + 2 * ds)
+            + dtr * di + di + di * ds + di + di * d)
+
+
+def _norm_params(cfg) -> int:
+    return cfg.d_model * (2 if cfg.norm == "layernorm" else 1)
+
+
+def _block_params(cfg, kind: BlockKind) -> int:
+    n = _norm_params(cfg)
+    if kind.family == "ssm":
+        return n + _mamba_params(cfg)
+    if kind.family == "hybrid":
+        n += _attn_params(cfg) + _mamba_params(cfg) + 2 * cfg.d_model + 2
+    else:
+        n += _attn_params(cfg)
+    if kind.cross:
+        n += _norm_params(cfg) + _attn_params(cfg)
+    n += _norm_params(cfg)
+    if cfg.moe and kind.family == "moe":
+        m = cfg.moe
+        gated = 3 if layers.gated_activation(cfg.activation) else 2
+        n += cfg.d_model * m.num_experts
+        n += m.num_experts * cfg.d_model * m.d_ff_expert * gated
+        if m.num_shared_experts:
+            n += _mlp_params(cfg.d_model, m.d_ff_shared, cfg.activation)
+            n += cfg.d_model
+    else:
+        n += _mlp_params(cfg.d_model, cfg.d_ff, cfg.activation)
+    return n
+
+
+def count_params_analytic(cfg, trainable_blocks: Optional[int] = None) -> int:
+    """Total params, or params of the last `trainable_blocks` blocks only."""
+    per_block = [(_block_params(cfg, seg.kind), seg.count)
+                 for seg in body_segments(cfg)]
+    if trainable_blocks is not None and trainable_blocks >= 0:
+        want = min(trainable_blocks, cfg.num_layers)
+        total, seen = 0, 0
+        for n, count in reversed(per_block):
+            take = min(count, want - seen)
+            total += n * take
+            seen += take
+            if seen >= want:
+                break
+        return total
+    total = sum(n * c for n, c in per_block)
+    total += cfg.vocab_size * cfg.d_model           # embed
+    if cfg.pos_embed == "learned":
+        total += cfg.max_seq * cfg.d_model
+    total += _norm_params(cfg)
+    if not cfg.tie_embeddings:
+        total += cfg.d_model * cfg.vocab_size
+    if cfg.encoder_layers:
+        total += cfg.encoder_layers * (
+            _block_params(cfg, BlockKind("enc", causal=False)))
+        total += _norm_params(cfg) + cfg.encoder_seq * cfg.d_model
+    return total

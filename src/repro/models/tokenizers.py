@@ -1,0 +1,104 @@
+"""Meta-Transformer modality-specific tokenizers — the MPSL CLIENT head W_h.
+
+These are the paper's lightweight client-side models (~1M trainable params
+for ViT-B): they turn raw modality inputs into token embeddings that are
+sent to the server as smashed data.
+
+  * vision — ViT patchify: [B, H, W, 3] -> 16x16 patches -> linear -> +cls +pos
+  * text   — CLIP-style BPE ids -> embedding table -> +pos
+  * audio  — AST: log-mel spectrogram [B, T, n_mels] -> 16x16 patches ->
+             linear -> +cls +pos
+
+A cls token is prepended for vision/audio (paper Sec. 4: only cls tokens are
+concatenated in late fusion)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+PATCH = 16
+
+
+@dataclasses.dataclass(frozen=True)
+class ModalitySpec:
+    name: str            # vision | text | audio
+    # vision: (H, W); audio: (T_frames, n_mels); text: max_len
+    input_shape: tuple
+    vocab_size: int = 0  # text only
+
+    @property
+    def num_tokens(self) -> int:
+        if self.name == "text":
+            return self.input_shape[0]
+        h, w = self.input_shape[:2]
+        return (h // PATCH) * (w // PATCH) + 1          # +cls
+
+    def patch_dim(self) -> int:
+        if self.name == "vision":
+            return PATCH * PATCH * 3
+        if self.name == "audio":
+            return PATCH * PATCH                         # single-channel mel
+        raise ValueError(self.name)
+
+
+VISION_224 = ModalitySpec("vision", (224, 224))
+AUDIO_128x1024 = ModalitySpec("audio", (1024, 128))
+TEXT_77 = ModalitySpec("text", (77,), vocab_size=49_408)
+
+MODALITIES = {"vision": VISION_224, "audio": AUDIO_128x1024, "text": TEXT_77}
+
+
+def init_tokenizer(key, spec: ModalitySpec, d_model: int):
+    ks = jax.random.split(key, 4)
+    if spec.name == "text":
+        return {
+            "embed": layers.dense_init(ks[0], (spec.vocab_size, d_model),
+                                       in_axis_size=d_model),
+            "pos": layers.dense_init(ks[1], (spec.num_tokens, d_model),
+                                     in_axis_size=d_model),
+        }
+    return {
+        "proj": layers.dense_init(ks[0], (spec.patch_dim(), d_model)),
+        "proj_b": jnp.zeros((d_model,), jnp.float32),
+        "cls": layers.dense_init(ks[1], (1, d_model), in_axis_size=d_model),
+        "pos": layers.dense_init(ks[2], (spec.num_tokens, d_model),
+                                 in_axis_size=d_model),
+    }
+
+
+def _patchify(x, patch=PATCH):
+    """[B, H, W, C] -> [B, (H/p)*(W/p), p*p*C]."""
+    b, h, w = x.shape[:3]
+    c = x.shape[3] if x.ndim == 4 else 1
+    if x.ndim == 3:
+        x = x[..., None]
+    x = x.reshape(b, h // patch, patch, w // patch, patch, c)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, (h // patch) * (w // patch), patch * patch * c)
+
+
+def apply_tokenizer(params, x, spec: ModalitySpec, dtype=jnp.float32):
+    """Raw modality input -> token embeddings [B, N_tokens, D]."""
+    if spec.name == "text":
+        # the BPE embedding table is the pretrained CLIP vocabulary and is
+        # FROZEN (paper: clients train ~1M params — patch projections and
+        # positions — not the 38M text table)
+        emb = jax.lax.stop_gradient(params["embed"]).astype(dtype)[x]
+        return emb + params["pos"].astype(dtype)[None, : x.shape[1]]
+    patches = _patchify(x.astype(dtype))
+    tok = jnp.einsum("bnp,pd->bnd", patches, params["proj"].astype(dtype))
+    tok = tok + params["proj_b"].astype(dtype)
+    cls = jnp.broadcast_to(params["cls"].astype(dtype)[None],
+                           (tok.shape[0], 1, tok.shape[2]))
+    tok = jnp.concatenate([cls, tok], axis=1)
+    return tok + params["pos"].astype(dtype)[None, : tok.shape[1]]
+
+
+def tokenizer_param_count(spec: ModalitySpec, d_model: int) -> int:
+    if spec.name == "text":
+        return (spec.vocab_size + spec.num_tokens) * d_model
+    return (spec.patch_dim() + 1 + 1 + spec.num_tokens) * d_model

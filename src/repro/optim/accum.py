@@ -1,0 +1,36 @@
+"""Microbatch gradient accumulation: split the leading batch dim of a batch
+pytree into `microbatches` slices, lax.scan a grad fn over them and average.
+Keeps peak activation memory at 1/microbatches of the full-batch step."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def accumulate_grads(grad_fn, params, batch, microbatches: int):
+    """grad_fn(params, microbatch) -> (loss, aux), grads."""
+    if microbatches <= 1:
+        (loss, aux), grads = grad_fn(params, batch)
+        return (loss, aux), grads
+
+    def reshape(x):
+        b = x.shape[0]
+        assert b % microbatches == 0, (b, microbatches)
+        return x.reshape((microbatches, b // microbatches) + x.shape[1:])
+
+    micro = jax.tree_util.tree_map(reshape, batch)
+
+    def step(carry, mb):
+        acc_g, acc_l = carry
+        (loss, _aux), grads = grad_fn(params, mb)
+        acc_g = jax.tree_util.tree_map(jnp.add, acc_g, grads)
+        return (acc_g, acc_l + loss), None
+
+    zero_g = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (grads, loss_sum), _ = jax.lax.scan(
+        step, (zero_g, jnp.zeros((), jnp.float32)),
+        micro)
+    scale = 1.0 / microbatches
+    grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+    return (loss_sum * scale, None), grads

@@ -1,0 +1,1 @@
+"""Distribution: mesh helpers and sharding rules."""

@@ -1,0 +1,2 @@
+"""Training loop with fault tolerance."""
+from repro.train.trainer import Trainer, TrainerConfig

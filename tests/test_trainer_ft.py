@@ -1,0 +1,78 @@
+"""Fault-tolerance integration tests: checkpoint/restart bitwise resume,
+straggler masking in the loop, elastic client rejoin."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import MPSLConfig, RunConfig, SHAPES, get_config, reduced
+from repro.core import mpsl, split
+from repro.data import ClientLoader, SyntheticLM, dirichlet_partition
+from repro.launch.train import make_lm_loader
+from repro.optim import schedules
+from repro.train import Trainer, TrainerConfig
+
+
+def _setup(tmp_path=None, drop_prob=0.0, n=4, steps=6):
+    cfg = reduced(get_config("minitron-4b"))
+    mp = MPSLConfig(n_clients=n, trainable_blocks=1, head_adapter_rank=4)
+    run = RunConfig(model=cfg, shape=SHAPES["train_4k"], mpsl=mp,
+                    compute_dtype="float32", learning_rate=1e-3)
+    key = jax.random.PRNGKey(0)
+    params, frozen, _ = split.init_mpsl_lm(key, cfg, run)
+    state = mpsl.init_state(params, frozen)
+    loss_fn = mpsl.make_lm_loss(cfg, run)
+    step_fn = jax.jit(mpsl.make_train_step(loss_fn, run,
+                                           schedules.constant(1e-3)))
+    loader = make_lm_loader(cfg, n, 2, 24, seed=0, drop_prob=drop_prob)
+    tc = TrainerConfig(total_steps=steps, ckpt_every=2,
+                       ckpt_dir=str(tmp_path) if tmp_path else None,
+                       log_every=1)
+    return cfg, state, step_fn, loader, tc
+
+
+def test_restart_is_bitwise_identical(tmp_path):
+    """Run 6 steps straight vs 3 steps + crash + resume: identical states."""
+    _, state, step_fn, loader, tc = _setup(tmp_path / "a", steps=6)
+    t = Trainer(step_fn, state, loader, tc, log_fn=lambda s: None)
+    t.run()
+    straight = t.state
+
+    _, state2, step_fn2, loader2, tc2 = _setup(tmp_path / "b", steps=6)
+    tc2.total_steps = 3
+    t2 = Trainer(step_fn2, state2, loader2, tc2, log_fn=lambda s: None)
+    t2.run(3)
+    t2.checkpoint_now()
+    t2.ckpt.wait()
+    # "crash": rebuild everything from scratch; trainer auto-resumes
+    _, state3, step_fn3, loader3, tc3 = _setup(tmp_path / "b", steps=6)
+    t3 = Trainer(step_fn3, state3, loader3, tc3, log_fn=lambda s: None)
+    assert int(t3.state["step"]) == 3
+    t3.run(6)
+
+    for a, b in zip(jax.tree_util.tree_leaves(straight["params"]),
+                    jax.tree_util.tree_leaves(t3.state["params"])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=0, rtol=0)
+
+
+def test_straggler_masking_trains(tmp_path):
+    _, state, step_fn, loader, tc = _setup(None, drop_prob=0.4, steps=8)
+    t = Trainer(step_fn, state, loader, tc, log_fn=lambda s: None)
+    out = t.run()
+    assert out["final_loss"] is not None
+    hist = [h["loss"] for h in t.metrics_history]
+    assert hist[-1] < hist[0]
+
+
+def test_elastic_rejoin():
+    _, state, step_fn, loader, tc = _setup(None, steps=2)
+    t = Trainer(step_fn, state, loader, tc, log_fn=lambda s: None)
+    t.run(2)
+    before = np.asarray(t.state["params"]["client"]["adapter"]["a"])
+    t.rejoin_client(1)
+    after = np.asarray(t.state["params"]["client"]["adapter"]["a"])
+    expect = before.mean(axis=0)
+    np.testing.assert_allclose(after[1], expect, atol=1e-6)
+    np.testing.assert_array_equal(after[0], before[0])
