@@ -1,0 +1,253 @@
+"""Fused-vs-unfused kernel benchmark -> BENCH_kernels.json.
+
+For each kernel on the MPSL hot loop (flash attention, the quant8 link
+compressor, the fused softmax-xent head) this times the fused Pallas
+lowering against the unfused jnp lowering at the three assigned cell
+shapes (train_4k / prefill_32k / decode_32k) and records, per entry:
+
+  * wall_us             - median wall time (benchmarks.common.time_fn)
+  * bytes_moved         - analytic HBM traffic model for the lowering
+  * achieved_bytes_per_s- bytes_moved / wall time
+
+On CPU the Pallas kernels execute under interpret=True, where wall time
+measures the Python interpreter loop rather than a mosaic lowering; the
+``bytes_moved`` column is therefore the load-bearing comparison there
+(every entry records its ``interpret`` flag, and the JSON meta block
+repeats the caveat). Sequence axes are capped (default 4096 tokens,
+``--full`` lifts it on real hardware) so the interpret sweep stays
+tractable; capped entries record the original cell length.
+
+Traffic model: f32 words x 4 bytes, counting one read and one write per
+elementwise pass and re-reads of streamed tiles (k/v per q-block sweep,
+w per token-tile sweep). Fused lowerings never materialize the [Sq,Sk]
+score matrix or the [T,V] logit matrix; the unfused models charge those
+at one write plus the softmax passes that re-read them.
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+
+F32 = 4  # bytes per f32 word
+
+
+# ---------------------------------------------------------------------------
+# analytic HBM traffic models
+
+
+def _attn_bytes(lowering: str, b, sq, sk, h, hd, bq, bk, grad: bool) -> int:
+    nq = -(-sq // bq)
+    qkv = b * h * (sq * hd + 2 * sk * hd)          # one full read of q,k,v
+    out = b * h * sq * hd                          # o write
+    if lowering == "fused":
+        # k/v are streamed once per q-block sweep; lse is one word per row
+        fwd = b * h * (sq * hd + 2 * nq * sk * hd) + out + b * h * sq
+        if not grad:
+            return fwd * F32
+        # dq kernel + dkv kernel each re-stream the tiles; dq/dk/dv writes
+        bwd = 2 * fwd + b * h * (sq * hd + 2 * sk * hd)
+        return (fwd + bwd) * F32
+    # unfused: scores written once, re-read by max/exp/sum/div (softmax),
+    # probs re-read for the pv matmul -> ~5 passes over the S^2 matrix
+    s2 = b * h * sq * sk
+    fwd = qkv + out + 5 * s2
+    if not grad:
+        return fwd * F32
+    bwd = qkv + 6 * s2 + b * h * (sq * hd + 2 * sk * hd)   # recompute + dS
+    return (fwd + bwd) * F32
+
+
+def _quant_bytes(lowering: str, rows, d) -> int:
+    n = rows * d
+    if lowering == "fused":
+        return 2 * n * F32                         # one read + one write
+    # unfused jnp: absmax reduction read, then four elementwise
+    # read-write passes (scale-divide, round, clip, dequant-multiply)
+    return (n + 4 * 2 * n) * F32
+
+
+def _ce_bytes(lowering: str, t, d, v, bt, bv, grad: bool) -> int:
+    nt, nv = -(-t // bt), -(-v // bv)
+    if lowering == "fused":
+        # h tiles re-read per vocab step, w re-read per token tile;
+        # loss/lse are one word per token
+        fwd = (nv * t * d + nt * d * v + 2 * t) * F32
+        if not grad:
+            return fwd
+        # dh sweep re-reads w, dw sweep re-reads h; dh/dw writes
+        bwd = (nv * t * d + 2 * nt * d * v + t * d + d * v)
+        return fwd + bwd * F32
+    # unfused: [T,V] logits written + ~3 softmax passes, fwd and bwd
+    tv = t * v
+    fwd = (t * d + d * v + 4 * tv) * F32
+    if not grad:
+        return fwd
+    return fwd + (t * d + d * v + 4 * tv + t * d + d * v) * F32
+
+
+# ---------------------------------------------------------------------------
+# cell definitions
+
+
+def _cells(cap: int):
+    """(name, attn sq/sk, quant rows, ce tokens) per assigned cell shape."""
+    from repro.configs import SHAPES
+
+    cells = []
+    for name in ("train_4k", "prefill_32k", "decode_32k"):
+        shape = SHAPES[name]
+        seq = min(shape.seq_len, cap)
+        if shape.kind == "decode":
+            # decode: a handful of live query tokens against a long cache
+            sq, rows, ce_t = 128, shape.global_batch, 0
+        elif shape.kind == "prefill":
+            sq, rows, ce_t = seq, seq, 0
+        else:
+            sq, rows, ce_t = seq, seq, seq
+        cells.append(dict(name=name, kind=shape.kind, seq=seq,
+                          cell_seq=shape.seq_len, sq=sq, rows=rows, ce_t=ce_t))
+    return cells
+
+
+def run(out: str = "BENCH_kernels.json", cap: int = 4096,
+        iters: int = 2) -> dict:
+    import jax
+    import jax.numpy as jnp
+    from benchmarks.common import emit, time_fn
+    from repro.core import compression, losses
+    from repro.kernels import ops
+
+    interpret = jax.default_backend() != "tpu"
+    d_model, hd, heads, vocab = 1024, 64, 4, 32768
+    bq = bk = 512
+    bt, bv = 512, 4096
+    key = jax.random.PRNGKey(0)
+    entries = []
+
+    def record(kernel, cell, lowering, shape, fn, *args, nbytes):
+        us = time_fn(fn, *args, iters=iters, warmup=1)
+        entries.append(dict(
+            kernel=kernel, cell=cell["name"], lowering=lowering,
+            shape=shape, wall_us=round(us, 1), bytes_moved=int(nbytes),
+            achieved_bytes_per_s=round(nbytes / (us * 1e-6), 1),
+            interpret=interpret,
+            capped=cell["seq"] != cell["cell_seq"],
+        ))
+        emit(f"kernel_bench/{kernel}/{cell['name']}/{lowering}", us,
+             f"bytes={int(nbytes)}")
+
+    for cell in _cells(cap):
+        grad = cell["kind"] == "train"
+        sq = sk = cell["sq"]
+        if cell["kind"] == "decode":
+            sk = cell["seq"]
+
+        # ---- flash attention (fwd for serving cells, fwd+bwd for train)
+        q = jax.random.normal(key, (1, sq, heads, hd), jnp.float32)
+        k = jax.random.normal(key, (1, sk, heads, hd), jnp.float32)
+        v = jax.random.normal(key, (1, sk, heads, hd), jnp.float32)
+        qp = (jnp.arange(sq)[None] + (sk - sq)).astype(jnp.int32)
+        kp = jnp.arange(sk)[None].astype(jnp.int32)
+
+        def attn_fused(q, k, v):
+            return ops.flash_attention(q, k, v, qp, kp,
+                                       block_q=bq, block_k=bk)
+
+        def attn_ref(q, k, v):
+            from repro.kernels.ref import flash_attention_ref
+            return flash_attention_ref(q, k, v, qp, kp)
+
+        for lowering, f in (("fused_pallas", attn_fused),
+                            ("unfused_jnp", attn_ref)):
+            if grad:
+                fn = jax.jit(jax.grad(lambda q, k, v, f=f: f(q, k, v).sum(),
+                                      argnums=(0, 1, 2)))
+            else:
+                fn = jax.jit(f)
+            model = "fused" if lowering.startswith("fused") else "unfused"
+            nb = _attn_bytes(model, 1, sq, sk, heads, hd, bq, bk, grad)
+            record("flash_attention", cell, lowering,
+                   dict(b=1, sq=sq, sk=sk, h=heads, hd=hd, grad=grad),
+                   fn, q, k, v, nbytes=nb)
+
+        # ---- quant8 uplink compression (the smashed-data link)
+        rows = cell["rows"]
+        x = jax.random.normal(key, (rows, d_model), jnp.float32)
+        record("quant8_uplink", cell, "fused_pallas",
+               dict(rows=rows, d=d_model),
+               jax.jit(lambda x: compression.compress_activations(x, None)),
+               x, nbytes=_quant_bytes("fused", rows, d_model))
+        record("quant8_uplink", cell, "unfused_jnp",
+               dict(rows=rows, d=d_model),
+               jax.jit(lambda x: compression._quant_dequant_jnp(x, None)),
+               x, nbytes=_quant_bytes("unfused", rows, d_model))
+
+        # ---- fused CE head (train cells only: loss + grads)
+        if cell["ce_t"]:
+            t = cell["ce_t"]
+            h = jax.random.normal(key, (t, d_model), jnp.float32) * 0.1
+            w = jax.random.normal(key, (d_model, vocab), jnp.float32) * 0.02
+            lab = jax.random.randint(key, (t,), 0, vocab)
+
+            def ce(impl):
+                loss = functools.partial(losses.chunked_softmax_xent,
+                                         chunk=bt, impl=impl)
+                return jax.jit(jax.grad(
+                    lambda h, w: loss(h, w, lab).mean(), argnums=(0, 1)))
+
+            record("softmax_xent", cell, "fused_pallas",
+                   dict(t=t, d=d_model, v=vocab, grad=True), ce("pallas"),
+                   h, w, nbytes=_ce_bytes("fused", t, d_model, vocab,
+                                          bt, bv, True))
+            record("softmax_xent", cell, "unfused_jnp",
+                   dict(t=t, d=d_model, v=vocab, grad=True), ce("jnp"),
+                   h, w, nbytes=_ce_bytes("unfused", t, d_model, vocab,
+                                          bt, bv, True))
+
+    by_key = {}
+    for e in entries:
+        by_key.setdefault((e["kernel"], e["cell"]), {})[e["lowering"]] = e
+    summary = {
+        f"{k}/{c}": dict(
+            fused_bytes=p["fused_pallas"]["bytes_moved"],
+            unfused_bytes=p["unfused_jnp"]["bytes_moved"],
+            fused_beats_unfused_bytes=(
+                p["fused_pallas"]["bytes_moved"]
+                < p["unfused_jnp"]["bytes_moved"]),
+        )
+        for (k, c), p in by_key.items()
+        if {"fused_pallas", "unfused_jnp"} <= p.keys()
+    }
+    doc = dict(
+        meta=dict(
+            backend=jax.default_backend(), interpret=interpret, cap=cap,
+            note=("interpret=True wall times measure the Pallas Python "
+                  "interpreter, not a compiled lowering; compare lowerings "
+                  "on bytes_moved there"),
+        ),
+        entries=entries,
+        summary=summary,
+    )
+    with open(out, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    print(f"kernel_bench: wrote {out} ({len(entries)} entries)")
+    return doc
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--out", default="BENCH_kernels.json")
+    p.add_argument("--cap", type=int, default=4096,
+                   help="sequence-axis cap for interpret-mode tractability")
+    p.add_argument("--full", action="store_true",
+                   help="lift the cap (run true cell lengths; TPU only)")
+    p.add_argument("--iters", type=int, default=2)
+    args = p.parse_args()
+    run(out=args.out, cap=10 ** 9 if args.full else args.cap,
+        iters=args.iters)
+
+
+if __name__ == "__main__":
+    main()

@@ -51,6 +51,10 @@ def main() -> None:
     T.fig3_comm_overhead()
     T.fig6_encoder_depth_cost()
     kernel_microbench()
+    from benchmarks import kernel_bench
+    # --fast keeps the interpret-mode sweep short; the full cap is the
+    # default standalone invocation (python -m benchmarks.kernel_bench)
+    kernel_bench.run(cap=512 if args.fast else 4096)
     if not args.fast:
         T.table1_accuracy()
         T.table2_retrieval()

@@ -182,6 +182,7 @@ class RunConfig:
     moe_capacity: float = 2.0           # EP per-expert capacity slack
     ssm_impl: str = "jnp"               # jnp | pallas
     ssm_chunk: int = 256                # selective-scan chunk length
+    ce_impl: str = "jnp"                # jnp | pallas (fused LM-head CE)
     ce_chunk: int = 512                 # chunked-CE token block
     # sequence-parallel residual activations (Korthikanti-style SP): the
     # per-layer scan carry is sharded on seq over the TP axis, cutting the
@@ -204,6 +205,7 @@ class RunConfig:
                 "moe": self.moe_impl, "moe_capacity": self.moe_capacity,
                 "ssm": self.ssm_impl,
                 "ssm_chunk": self.ssm_chunk,
+                "ce": self.ce_impl,
                 "unroll_layers": self.unroll_layers,
                 "attn_seq_shard": self.attn_seq_shard,
                 "act_dims": (("batch", "seq_model", None)

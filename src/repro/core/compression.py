@@ -11,14 +11,28 @@ link to int8 with per-token symmetric scaling:
     the COTANGENT, modeling an int8 gradient downlink.
 
 Stochastic rounding keeps both unbiased. 4x link-bytes reduction.
-"""
+
+Both links dispatch to the fused Pallas kernel (repro.kernels.quant8):
+one VMEM read + one write per element for scale/round/dequant, in the
+forward AND the cotangent direction, instead of the four passes the
+unfused jnp lowering takes. The jnp path below is kept as the oracle
+(``impl='jnp'``, used by the equivalence tests)."""
 from __future__ import annotations
+
+import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+
+# scale payload: one f32 per token row (per-row symmetric quantization)
+SCALE_BYTES = 4
 
 
-def _quant_dequant(x, key, bits: int = 8):
+def _quant_dequant_jnp(x, key, bits: int = 8):
+    """Unfused reference lowering (4 passes: absmax, scale, round, dequant)."""
     qmax = 2.0 ** (bits - 1) - 1
     x32 = x.astype(jnp.float32)
     scale = jnp.max(jnp.abs(x32), axis=-1, keepdims=True) / qmax
@@ -30,6 +44,14 @@ def _quant_dequant(x, key, bits: int = 8):
         y = jnp.round(y)
     y = jnp.clip(y, -qmax, qmax)
     return (y * scale).astype(x.dtype)
+
+
+def _quant_dequant(x, key, bits: int = 8, impl: str = "pallas"):
+    if impl == "pallas":
+        # kops.quant_dequant already carries the straight-through VJP, but
+        # callers below wrap it in their own custom_vjp, which overrides.
+        return kops.quant_dequant(x, key, bits=bits)
+    return _quant_dequant_jnp(x, key, bits=bits)
 
 
 @jax.custom_vjp
@@ -65,8 +87,8 @@ compress_gradients.defvjp(_cg_fwd, _cg_bwd)
 
 
 def compressed_bytes(shape, bits: int = 8) -> int:
-    """Wire size of a compressed tensor (payload + per-token scales)."""
-    import numpy as np
+    """Wire size of a compressed tensor: ceil(bits/8 * n) payload plus one
+    f32 scale per token row (the cost model in core.costs quotes these)."""
     n = int(np.prod(shape))
     tokens = n // shape[-1]
-    return n * bits // 8 + tokens * 4
+    return math.ceil(n * bits / 8) + tokens * SCALE_BYTES

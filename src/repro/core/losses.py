@@ -9,13 +9,27 @@ import jax
 import jax.numpy as jnp
 
 
-def chunked_softmax_xent(h, w, labels, valid=None, chunk: int = 512):
+def chunked_softmax_xent(h, w, labels, valid=None, chunk: int = 512,
+                         impl: str = "jnp"):
     """Per-token CE without materializing full [T, V] f32 logits.
 
-    h [T, D], w [D, V], labels [T] -> per-token loss [T]. The sequence is
-    processed in `chunk`-token slices under jax.checkpoint so the backward
-    pass recomputes each chunk's logits instead of saving them.
+    h [T, D], w [D, V], labels [T] -> per-token loss [T].
+
+    impl='jnp' (the oracle): `chunk`-token slices under jax.checkpoint so
+    the backward recomputes each chunk's logits instead of saving them.
+    impl='pallas': the fused online-softmax kernel (repro.kernels) —
+    vocab-tiled in both directions, selected via `run.impls['ce']`.
     """
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        # vocab tile scales with V so h is re-swept at most V/4096 times
+        # per pass ([chunk, 4096] f32 w-tile = 4 MB VMEM)
+        losses = kops.softmax_xent_tokens(h, w, labels.astype(jnp.int32),
+                                          block_t=min(chunk, h.shape[0]),
+                                          block_v=min(4096, w.shape[1]))
+        if valid is not None:
+            losses = losses * valid.astype(jnp.float32)
+        return losses
     t, d = h.shape
     chunk = min(chunk, t)
     n = -(-t // chunk)

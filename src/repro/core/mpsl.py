@@ -144,7 +144,8 @@ def make_lm_loss(cfg, run):
                   in trainable["server"] else
                   frozen["embed"]["table"].T)
         per_tok = losses.chunked_softmax_xent(
-            flat_h, w_tail, flat_l, chunk=run_ce_chunk(run))
+            flat_h, w_tail, flat_l, chunk=run_ce_chunk(run),
+            impl=impls.get("ce", "jnp"))
         per_client = per_tok.reshape(n, -1).mean(axis=1)        # L_n
 
         # ---- 5. aggregated loss => single backward pass ----

@@ -1,17 +1,38 @@
-"""Flash attention as a Pallas TPU kernel.
+"""Flash attention as Pallas TPU kernels — fused forward AND backward.
 
 TPU adaptation of the memory-hierarchy insight behind FlashAttention:
 HBM -> VMEM blocking with an online softmax so the S x S score matrix is
-never materialized. The grid is (batch, q-head, q-block, kv-block); the
-TPU grid executes the LAST axis sequentially per core, so the f32
-accumulator / running max / normalizer live in VMEM scratch across the
-kv-block sweep (revolving accumulation — the Pallas-TPU analogue of the
-CUDA version's per-SM shared-memory loop).
+never materialized, in either direction of the train step.
+
+Forward: grid (batch, q-head, q-block, kv-block); the TPU grid executes
+the LAST axis sequentially per core, so the f32 accumulator / running
+max / normalizer live in VMEM scratch across the kv-block sweep
+(revolving accumulation — the Pallas-TPU analogue of the CUDA version's
+per-SM shared-memory loop). The kernel additionally emits the per-row
+logsumexp (LSE) residual so the backward can reconstruct probabilities
+blockwise without saving them.
+
+Backward: the standard two-kernel split.
+  * dq  — grid (batch, q-head, q-block, kv-block); dq accumulates in
+    VMEM scratch across the kv sweep.
+  * dkv — grid (batch, kv-head, kv-block, q-block); dk/dv accumulate in
+    VMEM scratch across the q sweep, summing the G query heads of each
+    kv head in-block (GQA without KV gradient scatter).
+Both recompute p = exp(s - lse) from (q, k, v, lse); the only extra
+residuals beyond the inputs are LSE and delta = rowsum(dO * O), each
+O(S) per head. Peak live intermediates stay O(block_q * block_k).
 
 GQA is handled by BlockSpec index maps: q head h reads kv head h // G —
 no KV duplication in VMEM. Masking (causal / sliding window / validity)
-is by absolute positions streamed as int32 blocks, so the same kernel
-serves training, prefill and ragged decode layouts.
+is by absolute positions streamed as int32 blocks, so the same kernels
+serve training, prefill and ragged decode layouts.
+
+Sequence lengths that do not divide the block sizes are padded up to the
+block grid with `k_valid=False` keys and zero dO rows; masked key columns
+contribute nothing in either direction, and padded query rows produce
+zero output/LSE (note: a *fully masked* real row also yields output 0
+here, where the jnp reference's softmax degrades to a uniform average —
+don't construct such rows in oracle comparisons).
 
 Block shapes are MXU-aligned (multiples of 128 on the contracting dims;
 hd itself is 64/128 for every assigned arch).
@@ -28,10 +49,24 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
 
 
-def _kernel(qpos_ref, kpos_ref, kvalid_ref, q_ref, k_ref, v_ref,  # inputs
-            o_ref,                                                # outputs
-            acc_ref, m_ref, l_ref,                                # scratch
-            *, causal: bool, window: int, nk: int, scale: float):
+def _block_mask(qp, kp, kv, causal: bool, window: int):
+    """[bq, bk] validity from absolute positions + key-validity bits."""
+    ok = kv[None, :]
+    if causal:
+        ok &= kp[None, :] <= qp[:, None]
+    if window > 0:
+        ok &= (qp[:, None] - kp[None, :]) < window
+    return ok
+
+
+# ---------------------------------------------------------------------------
+# forward
+
+
+def _fwd_kernel(qpos_ref, kpos_ref, kvalid_ref, q_ref, k_ref, v_ref,  # in
+                o_ref, lse_ref,                                       # out
+                acc_ref, m_ref, l_ref,                                # scratch
+                *, causal: bool, window: int, nk: int, scale: float):
     ik = pl.program_id(3)
 
     @pl.when(ik == 0)
@@ -50,18 +85,15 @@ def _kernel(qpos_ref, kpos_ref, kvalid_ref, q_ref, k_ref, v_ref,  # inputs
     s = jax.lax.dot_general(
         q.astype(jnp.float32) * scale, k.astype(jnp.float32),
         (((1,), (1,)), ((), ())))             # [bq, bk]
-
-    ok = kv[None, :]
-    if causal:
-        ok &= kp[None, :] <= qp[:, None]
-    if window > 0:
-        ok &= (qp[:, None] - kp[None, :]) < window
-    s = jnp.where(ok, s, NEG_INF)
+    ok = _block_mask(qp, kp, kv, causal, window)
+    s_masked = jnp.where(ok, s, NEG_INF)
 
     m_prev = m_ref[...]
     l_prev = l_ref[...]
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
-    p = jnp.exp(s - m_new[:, None])
+    m_new = jnp.maximum(m_prev, jnp.max(s_masked, axis=-1))
+    # explicit p-masking (not just the NEG_INF bias) so fully-masked rows
+    # keep l == 0 and the LSE residual stays well-defined
+    p = jnp.where(ok, jnp.exp(s - m_new[:, None]), 0.0)
     corr = jnp.exp(m_prev - m_new)
     l_ref[...] = l_prev * corr + jnp.sum(p, axis=-1)
     acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot(
@@ -70,29 +102,61 @@ def _kernel(qpos_ref, kpos_ref, kvalid_ref, q_ref, k_ref, v_ref,  # inputs
 
     @pl.when(ik == nk - 1)
     def _finalize():
+        l = l_ref[...]
         o_ref[0, :, 0, :] = (
-            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+            acc_ref[...] / jnp.maximum(l, 1e-30)[:, None]
         ).astype(o_ref.dtype)
+        lse_ref[0, 0, :] = jnp.where(l > 0, m_ref[...] + jnp.log(
+            jnp.maximum(l, 1e-30)), 0.0)
+
+
+def _pad_axis(x, axis: int, pad: int, value=0):
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def _pad_inputs(q, k, v, q_pos, k_pos, k_valid, block_q, block_k):
+    """Pad seq axes up to the block grid; padded keys are marked invalid."""
+    sq, sk = q.shape[1], k.shape[1]
+    pad_q, pad_k = (-sq) % block_q, (-sk) % block_k
+    if k_valid is None:
+        k_valid = jnp.ones(k_pos.shape, bool)
+    if pad_q:
+        q = _pad_axis(q, 1, pad_q)
+        q_pos = _pad_axis(q_pos, 1, pad_q)
+    if pad_k:
+        k = _pad_axis(k, 1, pad_k)
+        v = _pad_axis(v, 1, pad_k)
+        k_pos = _pad_axis(k_pos, 1, pad_k, value=-1)
+        k_valid = _pad_axis(k_valid, 1, pad_k, value=False)
+    return q, k, v, q_pos, k_pos, k_valid
 
 
 def flash_attention_fwd(q, k, v, q_pos, k_pos, *, causal=True, window=0,
                         k_valid=None, block_q: int = 512,
-                        block_k: int = 512, interpret: bool = False):
-    """q [B,Sq,H,hd], k/v [B,Sk,K,hd] -> [B,Sq,H,hd]."""
+                        block_k: int = 512, return_lse: bool = False,
+                        interpret: bool = False):
+    """q [B,Sq,H,hd], k/v [B,Sk,K,hd] -> [B,Sq,H,hd] (+ LSE [B,H,Sq] f32).
+
+    Sq/Sk need not divide the block sizes — inputs are padded to the
+    block grid and outputs sliced back."""
     b, sq, h, hd = q.shape
     sk, kh = k.shape[1], k.shape[2]
     g = h // kh
     block_q = min(block_q, sq)
     block_k = min(block_k, sk)
-    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk, block_q, block_k)
-    nq, nk = sq // block_q, sk // block_k
-    if k_valid is None:
-        k_valid = jnp.ones((b, sk), bool)
+    q, k, v, q_pos, k_pos, k_valid = _pad_inputs(
+        q, k, v, q_pos, k_pos, k_valid, block_q, block_k)
+    sq_p, sk_p = q.shape[1], k.shape[1]
+    nq, nk = sq_p // block_q, sk_p // block_k
 
     grid = (b, h, nq, nk)
-    kernel = functools.partial(_kernel, causal=causal, window=int(window),
-                               nk=nk, scale=hd ** -0.5)
-    return pl.pallas_call(
+    kernel = functools.partial(_fwd_kernel, causal=causal,
+                               window=int(window), nk=nk, scale=hd ** -0.5)
+    out, lse = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -106,9 +170,16 @@ def flash_attention_fwd(q, k, v, q_pos, k_pos, *, causal=True, window=0,
             pl.BlockSpec((1, block_k, 1, hd),
                          lambda bi, hi, iq, ik: (bi, ik, hi // g, 0)),
         ],
-        out_specs=pl.BlockSpec((1, block_q, 1, hd),
-                               lambda bi, hi, iq, ik: (bi, iq, hi, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, sq, h, hd), q.dtype),
+        out_specs=[
+            pl.BlockSpec((1, block_q, 1, hd),
+                         lambda bi, hi, iq, ik: (bi, iq, hi, 0)),
+            pl.BlockSpec((1, 1, block_q),
+                         lambda bi, hi, iq, ik: (bi, hi, iq)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, sq_p, h, hd), q.dtype),
+            jax.ShapeDtypeStruct((b, h, sq_p), jnp.float32),
+        ],
         scratch_shapes=[
             pltpu.VMEM((block_q, hd), jnp.float32),       # acc
             pltpu.VMEM((block_q,), jnp.float32),          # m
@@ -116,3 +187,180 @@ def flash_attention_fwd(q, k, v, q_pos, k_pos, *, causal=True, window=0,
         ],
         interpret=interpret,
     )(q_pos, k_pos, k_valid, q, k, v)
+    out = out[:, :sq]
+    if return_lse:
+        return out, lse[:, :, :sq]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# backward
+
+
+def _bwd_dq_kernel(qpos_ref, kpos_ref, kvalid_ref, q_ref, k_ref, v_ref,
+                   do_ref, lse_ref, delta_ref,                        # in
+                   dq_ref,                                            # out
+                   acc_ref,                                           # scratch
+                   *, causal: bool, window: int, nk: int, scale: float):
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32)         # [bq, hd]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)         # [bk, hd]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)         # [bk, hd]
+    do = do_ref[0, :, 0, :].astype(jnp.float32)       # [bq, hd]
+    lse = lse_ref[0, 0, :]                            # [bq]
+    delta = delta_ref[0, 0, :]                        # [bq]
+    qp = qpos_ref[0, :]
+    kp = kpos_ref[0, :]
+    kv = kvalid_ref[0, :]
+
+    s = jax.lax.dot_general(q * scale, k, (((1,), (1,)), ((), ())))
+    ok = _block_mask(qp, kp, kv, causal, window)
+    p = jnp.where(ok, jnp.exp(s - lse[:, None]), 0.0)           # [bq, bk]
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())))   # [bq, bk]
+    ds = p * (dp - delta[:, None])
+    acc_ref[...] += jax.lax.dot(ds, k) * scale
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        dq_ref[0, :, 0, :] = acc_ref[...].astype(dq_ref.dtype)
+
+
+def _bwd_dkv_kernel(qpos_ref, kpos_ref, kvalid_ref, q_ref, k_ref, v_ref,
+                    do_ref, lse_ref, delta_ref,                       # in
+                    dk_ref, dv_ref,                                   # out
+                    dk_acc, dv_acc,                                   # scratch
+                    *, causal: bool, window: int, nq: int, g: int,
+                    scale: float):
+    iq = pl.program_id(3)
+
+    @pl.when(iq == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    k = k_ref[0, :, 0, :].astype(jnp.float32)          # [bk, hd]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)          # [bk, hd]
+    qp = qpos_ref[0, :]
+    kp = kpos_ref[0, :]
+    kv = kvalid_ref[0, :]
+    ok = _block_mask(qp, kp, kv, causal, window)       # [bq, bk]
+
+    # the G query heads of this kv head, unrolled (G is a small static int)
+    for gi in range(g):
+        q = q_ref[0, :, gi, :].astype(jnp.float32)     # [bq, hd]
+        do = do_ref[0, :, gi, :].astype(jnp.float32)   # [bq, hd]
+        lse = lse_ref[0, gi, :]                        # [bq]
+        delta = delta_ref[0, gi, :]                    # [bq]
+        s = jax.lax.dot_general(q * scale, k, (((1,), (1,)), ((), ())))
+        p = jnp.where(ok, jnp.exp(s - lse[:, None]), 0.0)
+        dv_acc[...] += jax.lax.dot_general(p, do, (((0,), (0,)), ((), ())))
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())))
+        ds = p * (dp - delta[:, None])
+        dk_acc[...] += jax.lax.dot_general(
+            ds, q, (((0,), (0,)), ((), ()))) * scale
+
+    @pl.when(iq == nq - 1)
+    def _finalize():
+        dk_ref[0, :, 0, :] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0, :, 0, :] = dv_acc[...].astype(dv_ref.dtype)
+
+
+def flash_attention_bwd(q, k, v, q_pos, k_pos, k_valid, out, lse, do, *,
+                        causal=True, window=0, block_q: int = 512,
+                        block_k: int = 512, interpret: bool = False):
+    """Blockwise VJP: (residuals, dO) -> (dq, dk, dv).
+
+    Probabilities are recomputed from (q, k, lse) tile-by-tile; nothing
+    [Sq, Sk]-shaped is ever live."""
+    b, sq, h, hd = q.shape
+    sk, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    scale = hd ** -0.5
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+
+    # delta_i = rowsum(dO_i * O_i)  -> [B, H, Sq] f32 (O(S) per head)
+    delta = jnp.einsum("bqhd,bqhd->bhq", do.astype(jnp.float32),
+                       out.astype(jnp.float32))
+
+    qp, kp = q_pos, k_pos
+    q_p, k_p, v_p, qp, kp, kv = _pad_inputs(q, k, v, qp, kp, k_valid,
+                                            block_q, block_k)
+    do_p = _pad_axis(do, 1, q_p.shape[1] - sq)
+    lse_p = _pad_axis(lse, 2, q_p.shape[1] - sq)
+    delta_p = _pad_axis(delta, 2, q_p.shape[1] - sq)
+    sq_p, sk_p = q_p.shape[1], k_p.shape[1]
+    nq, nk = sq_p // block_q, sk_p // block_k
+
+    dq = pl.pallas_call(
+        functools.partial(_bwd_dq_kernel, causal=causal, window=int(window),
+                          nk=nk, scale=scale),
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q), lambda bi, hi, iq, ik: (bi, iq)),
+            pl.BlockSpec((1, block_k), lambda bi, hi, iq, ik: (bi, ik)),
+            pl.BlockSpec((1, block_k), lambda bi, hi, iq, ik: (bi, ik)),
+            pl.BlockSpec((1, block_q, 1, hd),
+                         lambda bi, hi, iq, ik: (bi, iq, hi, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda bi, hi, iq, ik: (bi, ik, hi // g, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda bi, hi, iq, ik: (bi, ik, hi // g, 0)),
+            pl.BlockSpec((1, block_q, 1, hd),
+                         lambda bi, hi, iq, ik: (bi, iq, hi, 0)),
+            pl.BlockSpec((1, 1, block_q),
+                         lambda bi, hi, iq, ik: (bi, hi, iq)),
+            pl.BlockSpec((1, 1, block_q),
+                         lambda bi, hi, iq, ik: (bi, hi, iq)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, hd),
+                               lambda bi, hi, iq, ik: (bi, iq, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, sq_p, h, hd), q.dtype),
+        scratch_shapes=[pltpu.VMEM((block_q, hd), jnp.float32)],
+        interpret=interpret,
+    )(qp, kp, kv, q_p, k_p, v_p, do_p, lse_p, delta_p)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_bwd_dkv_kernel, causal=causal, window=int(window),
+                          nq=nq, g=g, scale=scale),
+        grid=(b, kh, nk, nq),
+        in_specs=[
+            pl.BlockSpec((1, block_q), lambda bi, ki, ik, iq: (bi, iq)),
+            pl.BlockSpec((1, block_k), lambda bi, ki, ik, iq: (bi, ik)),
+            pl.BlockSpec((1, block_k), lambda bi, ki, ik, iq: (bi, ik)),
+            pl.BlockSpec((1, block_q, g, hd),
+                         lambda bi, ki, ik, iq: (bi, iq, ki, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda bi, ki, ik, iq: (bi, ik, ki, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda bi, ki, ik, iq: (bi, ik, ki, 0)),
+            pl.BlockSpec((1, block_q, g, hd),
+                         lambda bi, ki, ik, iq: (bi, iq, ki, 0)),
+            pl.BlockSpec((1, g, block_q),
+                         lambda bi, ki, ik, iq: (bi, ki, iq)),
+            pl.BlockSpec((1, g, block_q),
+                         lambda bi, ki, ik, iq: (bi, ki, iq)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda bi, ki, ik, iq: (bi, ik, ki, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda bi, ki, ik, iq: (bi, ik, ki, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, sk_p, kh, hd), k.dtype),
+            jax.ShapeDtypeStruct((b, sk_p, kh, hd), v.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_k, hd), jnp.float32),
+            pltpu.VMEM((block_k, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, kv, q_p, k_p, v_p, do_p, lse_p, delta_p)
+
+    return dq[:, :sq], dk[:, :sk], dv[:, :sk]

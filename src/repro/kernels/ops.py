@@ -1,9 +1,18 @@
 """Jit'd public wrappers around the Pallas kernels.
 
-Forward passes run the kernels; backward passes use recompute-based VJPs
-through the pure-jnp references (the standard flash-attention strategy —
-nothing is stashed, the backward re-derives what it needs). On this CPU
-container kernels execute in interpret mode; on TPU `interpret=False`.
+Training-grade custom VJPs: flash attention and the fused softmax-xent
+run Pallas kernels in BOTH directions (the backward recomputes
+probabilities blockwise from the forward's LSE residual — nothing
+[S, S]- or [T, V]-shaped is ever live). The selective scan keeps the
+recompute-through-reference backward; quant-dequant is straight-through.
+On this CPU container kernels execute in interpret mode; on TPU
+`interpret=False`.
+
+The key-validity mask is resolved ONCE at the public entry (`None` ->
+all-ones) and threaded through the VJP residuals, so forward and
+backward always see the identical mask — including under `jax.jit`
+where the mask is a traced array and could not ride along as a static
+nondiff argument.
 """
 from __future__ import annotations
 
@@ -16,6 +25,7 @@ from repro.kernels import flash_attention as _fa
 from repro.kernels import quant8 as _q8
 from repro.kernels import ref as _ref
 from repro.kernels import selective_scan as _ss
+from repro.kernels import softmax_xent as _sx
 
 INTERPRET = jax.default_backend() != "tpu"
 
@@ -24,38 +34,78 @@ INTERPRET = jax.default_backend() != "tpu"
 # flash attention
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9))
 def flash_attention(q, k, v, q_pos, k_pos, causal=True, window=0,
                     k_valid=None, block_q=512, block_k=512):
+    """Fused attention with a fused blockwise backward (see _fa module)."""
     kv = k_valid if k_valid is not None else jnp.ones(k_pos.shape, bool)
+    return _flash_attention(q, k, v, q_pos, k_pos, kv, bool(causal),
+                            int(window), int(block_q), int(block_k))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9))
+def _flash_attention(q, k, v, q_pos, k_pos, k_valid, causal, window,
+                     block_q, block_k):
     return _fa.flash_attention_fwd(q, k, v, q_pos, k_pos, causal=causal,
-                                   window=window, k_valid=kv,
+                                   window=window, k_valid=k_valid,
                                    block_q=block_q, block_k=block_k,
                                    interpret=INTERPRET)
 
 
-def _fa_fwd(q, k, v, q_pos, k_pos, causal, window, k_valid, block_q,
+def _fa_fwd(q, k, v, q_pos, k_pos, k_valid, causal, window, block_q,
             block_k):
-    out = flash_attention(q, k, v, q_pos, k_pos, causal, window, k_valid,
-                          block_q, block_k)
-    return out, (q, k, v, q_pos, k_pos)
+    out, lse = _fa.flash_attention_fwd(q, k, v, q_pos, k_pos, causal=causal,
+                                       window=window, k_valid=k_valid,
+                                       block_q=block_q, block_k=block_k,
+                                       return_lse=True, interpret=INTERPRET)
+    # residuals carry the RESOLVED mask: fwd/bwd agree by construction
+    return out, (q, k, v, q_pos, k_pos, k_valid, out, lse)
 
 
-def _fa_bwd(causal, window, k_valid, block_q, block_k, res, g):
-    q, k, v, q_pos, k_pos = res
-    kv = k_valid if k_valid is not None else jnp.ones(k_pos.shape, bool)
-
-    def f(q, k, v):
-        return _ref.flash_attention_ref(q, k, v, q_pos, k_pos,
-                                        causal=causal, window=window,
-                                        k_valid=kv)
-
-    _, vjp = jax.vjp(f, q, k, v)
-    dq, dk, dv = vjp(g)
-    return dq, dk, dv, None, None
+def _fa_bwd(causal, window, block_q, block_k, res, g):
+    q, k, v, q_pos, k_pos, k_valid, out, lse = res
+    dq, dk, dv = _fa.flash_attention_bwd(
+        q, k, v, q_pos, k_pos, k_valid, out, lse, g, causal=causal,
+        window=window, block_q=block_q, block_k=block_k,
+        interpret=INTERPRET)
+    return dq, dk, dv, None, None, None
 
 
-flash_attention.defvjp(_fa_fwd, _fa_bwd)
+_flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+# ---------------------------------------------------------------------------
+# fused per-token softmax cross-entropy (LM head)
+
+
+def softmax_xent_tokens(h, w, labels, block_t=256, block_v=512):
+    """Per-token CE loss [T] from h [T, D], w [D, V], labels [T].
+
+    Online softmax over vocab tiles in both directions; logits are never
+    materialized at [T, V]."""
+    return _softmax_xent(h, w, labels, int(block_t), int(block_v))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _softmax_xent(h, w, labels, block_t, block_v):
+    loss, _ = _sx.softmax_xent_fwd(h, w, labels, block_t=block_t,
+                                   block_v=block_v, interpret=INTERPRET)
+    return loss
+
+
+def _sx_fwd(h, w, labels, block_t, block_v):
+    loss, lse = _sx.softmax_xent_fwd(h, w, labels, block_t=block_t,
+                                     block_v=block_v, interpret=INTERPRET)
+    return loss, (h, w, labels, lse)
+
+
+def _sx_bwd(block_t, block_v, res, g):
+    h, w, labels, lse = res
+    dh, dw = _sx.softmax_xent_bwd(h, w, labels, lse, g, block_t=block_t,
+                                  block_v=block_v, interpret=INTERPRET)
+    return dh, dw, None
+
+
+_softmax_xent.defvjp(_sx_fwd, _sx_bwd)
 
 
 # ---------------------------------------------------------------------------
@@ -114,17 +164,42 @@ selective_scan.defvjp(_ss_fwd, _ss_bwd)
 # quant-dequant (straight-through)
 
 
-@jax.custom_vjp
-def quant_dequant(x):
-    return _q8.quant_dequant_fwd(x, interpret=INTERPRET)
+def quant_dequant(x, key=None, bits: int = 8):
+    """Fused quant-dequant; stochastic rounding when a PRNG key is given.
+
+    The cotangent is straight-through (identity)."""
+    if key is None:
+        return _quant_dequant_det(x, int(bits))
+    return _quant_dequant_sr(x, key, int(bits))
 
 
-def _qd_fwd(x):
-    return quant_dequant(x), None
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _quant_dequant_det(x, bits):
+    return _q8.quant_dequant_fwd(x, bits=bits, interpret=INTERPRET)
 
 
-def _qd_bwd(_res, g):
+def _qd_fwd(x, bits):
+    return _quant_dequant_det(x, bits), None
+
+
+def _qd_bwd(_bits, _res, g):
     return (g,)
 
 
-quant_dequant.defvjp(_qd_fwd, _qd_bwd)
+_quant_dequant_det.defvjp(_qd_fwd, _qd_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _quant_dequant_sr(x, key, bits):
+    return _q8.quant_dequant_fwd(x, key=key, bits=bits, interpret=INTERPRET)
+
+
+def _qdsr_fwd(x, key, bits):
+    return _quant_dequant_sr(x, key, bits), None
+
+
+def _qdsr_bwd(_bits, _res, g):
+    return g, None
+
+
+_quant_dequant_sr.defvjp(_qdsr_fwd, _qdsr_bwd)

@@ -56,6 +56,16 @@ def selective_scan_ref(x, dt, b_in, c_in, a_log, h0=None):
     return ys.transpose(1, 0, 2).astype(x.dtype), h
 
 
+def softmax_xent_ref(h, w, labels):
+    """Materialized-logits per-token CE (and LSE), f32.
+
+    h [T, D], w [D, V], labels [T] -> (loss [T], lse [T])."""
+    logits = (h.astype(jnp.float32) @ w.astype(jnp.float32))
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return lse - gold, lse
+
+
 def quant_dequant_ref(x, bits: int = 8):
     """Deterministic symmetric per-row (last-axis) int quant-dequant."""
     qmax = 2.0 ** (bits - 1) - 1

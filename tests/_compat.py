@@ -1,0 +1,60 @@
+"""Hypothesis import-or-shim.
+
+The container image does not ship ``hypothesis``; the property tests only
+use ``@settings`` / ``@given`` with ``st.integers`` / ``st.sampled_from``.
+When the real package is available it is used unchanged; otherwise a
+deterministic mini-runner samples each strategy ``max_examples`` times
+from a fixed-seed PRNG, which keeps the property tests executable (and
+reproducible) instead of erroring at collection.
+"""
+from __future__ import annotations
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ModuleNotFoundError:
+
+    import random
+    import types
+
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample
+
+    def _integers(lo, hi):
+        return _Strategy(lambda rng: rng.randint(lo, hi))
+
+    def _sampled_from(seq):
+        items = list(seq)
+        return _Strategy(lambda rng: rng.choice(items))
+
+    def _booleans():
+        return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+    st = types.SimpleNamespace(integers=_integers,
+                               sampled_from=_sampled_from,
+                               booleans=_booleans)
+
+    def _given(**strategies):
+        def deco(f):
+            def runner():
+                n = getattr(runner, "_max_examples", 10)
+                rng = random.Random(0xC0FFEE)
+                for _ in range(n):
+                    f(**{k: s.sample(rng) for k, s in strategies.items()})
+            # zero-arg signature on purpose: pytest must not mistake the
+            # strategy kwargs for fixtures (no functools.wraps here — it
+            # would expose the wrapped signature via __wrapped__)
+            runner.__name__ = f.__name__
+            runner.__doc__ = f.__doc__
+            runner.is_hypothesis_test = True
+            return runner
+        return deco
+
+    def _settings(max_examples: int = 10, deadline=None, **_kw):
+        def deco(f):
+            f._max_examples = max_examples
+            return f
+        return deco
+
+    hypothesis = types.SimpleNamespace(given=_given, settings=_settings)

@@ -1,0 +1,275 @@
+"""Training-grade kernel validation: Pallas backward passes against
+jax.vjp through the pure-jnp references, in interpret mode on CPU.
+
+Covers the three fused-backward kernel families (flash attention,
+quant8 straight-through, fused softmax-xent) across causal / windowed /
+GQA / MQA and odd (non-block-multiple) shapes, plus the memory-analysis
+acceptance check: no [Sq, Sk]-shaped intermediate anywhere in the
+train-direction jaxpr at Sq = Sk = 4096."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compression, losses
+from repro.kernels import ops
+from repro.kernels.ref import (flash_attention_ref, quant_dequant_ref,
+                               softmax_xent_ref)
+
+ATOL = 2e-4
+
+
+def _qkv(key, b, sq, sk, h, kh, hd, dtype=jnp.float32):
+    q = jax.random.normal(key, (b, sq, h, hd), dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, sk, kh, hd), dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, sk, kh, hd), dtype)
+    qp = jnp.broadcast_to(jnp.arange(sq)[None] + (sk - sq),
+                          (b, sq)).astype(jnp.int32)
+    kp = jnp.broadcast_to(jnp.arange(sk)[None], (b, sk)).astype(jnp.int32)
+    return q, k, v, qp, kp
+
+
+# ---------------------------------------------------------------------------
+# flash attention backward
+
+
+@pytest.mark.parametrize(
+    "b,sq,sk,h,kh,hd,bq,bk,causal,window",
+    [
+        (1, 128, 128, 4, 4, 32, 64, 64, True, 0),    # MHA causal
+        (2, 128, 256, 8, 2, 64, 64, 128, True, 0),   # GQA rectangular
+        (1, 128, 128, 4, 2, 32, 64, 64, False, 0),   # full attention
+        (2, 64, 64, 2, 1, 128, 64, 64, True, 32),    # MQA sliding window
+        (1, 96, 96, 4, 2, 32, 64, 64, True, 0),      # Sq % block != 0
+        (1, 70, 130, 6, 3, 16, 64, 64, True, 33),    # odd both axes + window
+        (1, 200, 456, 4, 4, 32, 128, 128, False, 0), # odd, non-causal
+    ])
+def test_flash_backward_matches_ref_vjp(b, sq, sk, h, kh, hd, bq, bk,
+                                        causal, window):
+    key = jax.random.PRNGKey(42)
+    q, k, v, qp, kp = _qkv(key, b, sq, sk, h, kh, hd)
+
+    def f_ker(q, k, v):
+        return ops.flash_attention(q, k, v, qp, kp, causal=causal,
+                                   window=window, block_q=bq, block_k=bk)
+
+    def f_ref(q, k, v):
+        return flash_attention_ref(q, k, v, qp, kp, causal=causal,
+                                   window=window)
+
+    out_k, vjp_k = jax.vjp(f_ker, q, k, v)
+    out_r, vjp_r = jax.vjp(f_ref, q, k, v)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               atol=ATOL, rtol=ATOL)
+    g = jax.random.normal(jax.random.fold_in(key, 3), out_k.shape)
+    for name, dk_, dr_ in zip("dq dk dv".split(), vjp_k(g), vjp_r(g)):
+        np.testing.assert_allclose(np.asarray(dk_), np.asarray(dr_),
+                                   atol=ATOL, rtol=ATOL, err_msg=name)
+
+
+def test_flash_backward_kv_validity_mask_under_jit():
+    """Decode/ragged layout: the k_valid mask is a TRACED array under jit;
+    forward and backward must resolve the identical mask (regression for
+    the mask living in static nondiff args)."""
+    key = jax.random.PRNGKey(7)
+    b, sq, sk, h, kh, hd = 1, 64, 128, 4, 2, 32
+    valid_len = 70
+    q, k, v, _, _ = _qkv(key, b, sq, sk, h, kh, hd)
+    qp = (jnp.arange(sq)[None] + valid_len - sq).astype(jnp.int32) \
+        * jnp.ones((b, 1), jnp.int32)
+    kp = jnp.where(jnp.arange(sk) < valid_len, jnp.arange(sk),
+                   -1)[None].astype(jnp.int32) * jnp.ones((b, 1), jnp.int32)
+    kv = kp >= 0
+
+    @jax.jit
+    def grads_ker(q, k, v, kv):
+        def f(q, k, v):
+            return ops.flash_attention(q, k, v, qp, kp, causal=True,
+                                       k_valid=kv, block_q=64, block_k=64)
+        return jax.grad(lambda q, k, v: (f(q, k, v) ** 2).sum(),
+                        argnums=(0, 1, 2))(q, k, v)
+
+    def grads_ref(q, k, v, kv):
+        def f(q, k, v):
+            return flash_attention_ref(q, k, v, qp, kp, causal=True,
+                                       k_valid=kv)
+        return jax.grad(lambda q, k, v: (f(q, k, v) ** 2).sum(),
+                        argnums=(0, 1, 2))(q, k, v)
+
+    for name, a, r in zip("dq dk dv".split(), grads_ker(q, k, v, kv),
+                          grads_ref(q, k, v, kv)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(r),
+                                   atol=ATOL, rtol=ATOL, err_msg=name)
+
+
+def test_flash_backward_bf16():
+    key = jax.random.PRNGKey(11)
+    q, k, v, qp, kp = _qkv(key, 2, 128, 128, 4, 2, 32, jnp.bfloat16)
+
+    def f_ker(q, k, v):
+        return ops.flash_attention(q, k, v, qp, kp, causal=True,
+                                   block_q=64, block_k=64)
+
+    def f_ref(q, k, v):
+        return flash_attention_ref(q, k, v, qp, kp, causal=True)
+
+    g = jax.random.normal(key, q.shape[:2] + (4, 32)).astype(jnp.bfloat16)
+    _, vjp_k = jax.vjp(f_ker, q, k, v)
+    _, vjp_r = jax.vjp(f_ref, q, k, v)
+    for name, a, r in zip("dq dk dv".split(), vjp_k(g), vjp_r(g)):
+        assert a.dtype == jnp.bfloat16, name
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(r, np.float32),
+                                   atol=5e-2, rtol=5e-2, err_msg=name)
+
+
+def _collect_avals(jaxpr, out):
+    for eqn in jaxpr.eqns:
+        for var in list(eqn.invars) + list(eqn.outvars):
+            aval = getattr(var, "aval", None)
+            if aval is not None and hasattr(aval, "shape"):
+                out.append(tuple(aval.shape))
+        for param in eqn.params.values():
+            for sub in jax.tree_util.tree_leaves(
+                    param, is_leaf=lambda x: hasattr(x, "eqns")):
+                if hasattr(sub, "eqns"):
+                    _collect_avals(sub, out)
+                elif hasattr(sub, "jaxpr"):
+                    _collect_avals(sub.jaxpr, out)
+    return out
+
+
+def test_no_quadratic_intermediate_at_4k():
+    """Acceptance: the fwd+bwd jaxpr of the kernel attention path holds no
+    (4096, 4096)-shaped value anywhere (the blockwise kernels cap live
+    intermediates at block_q x block_k)."""
+    s, h, hd = 4096, 1, 64
+    q = jax.ShapeDtypeStruct((1, s, h, hd), jnp.float32)
+    p = jax.ShapeDtypeStruct((1, s), jnp.int32)
+
+    def loss(q, k, v, qp, kp):
+        return ops.flash_attention(q, k, v, qp, kp, causal=True).sum()
+
+    jaxpr = jax.make_jaxpr(
+        lambda q, k, v, qp, kp: jax.grad(loss, argnums=(0, 1, 2))(
+            q, k, v, qp, kp))(q, q, q, p, p)
+    shapes = _collect_avals(jaxpr.jaxpr, [])
+    quadratic = [sh for sh in shapes
+                 if sum(1 for d in sh if d >= s) >= 2]
+    assert not quadratic, quadratic
+
+
+# ---------------------------------------------------------------------------
+# quant8 straight-through cotangent
+
+
+@pytest.mark.parametrize("use_key", [False, True])
+def test_quant_ste_cotangent(use_key):
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (37, 96))          # odd row count
+    qkey = jax.random.PRNGKey(1) if use_key else None
+    g = jax.grad(lambda x: (ops.quant_dequant(x, qkey) * 3.0).sum())(x)
+    np.testing.assert_allclose(np.asarray(g), 3.0, atol=1e-6)
+
+
+def test_quant_kernel_stochastic_unbiased():
+    """Mean-error unbiasedness of the fused stochastic-rounding lowering
+    over non-degenerate rows (values strictly between int8 levels)."""
+    base = jnp.linspace(-1.0, 1.0, 64)[None, :] + 0.003
+    keys = jax.random.split(jax.random.PRNGKey(3), 768)
+    ys = jax.vmap(lambda k: ops.quant_dequant(base, k))(keys)
+    scale = float(jnp.max(jnp.abs(base)) / 127.0)
+    mean_err = float(jnp.max(jnp.abs(ys.mean(0) - base)))
+    # unbiased estimator: mean error shrinks ~ scale / sqrt(n_keys)
+    assert mean_err < 3.0 * scale / np.sqrt(len(keys)) + 1e-6, mean_err
+
+
+def test_quant_kernel_matches_jnp_oracle():
+    key = jax.random.PRNGKey(5)
+    x = jax.random.normal(key, (50, 33, 64))
+    np.testing.assert_allclose(
+        np.asarray(ops.quant_dequant(x)),
+        np.asarray(quant_dequant_ref(x)), atol=1e-6)
+    # same uniforms => identical stochastic decision as the jnp lowering
+    qk = jax.random.PRNGKey(9)
+    np.testing.assert_allclose(
+        np.asarray(ops.quant_dequant(x.reshape(-1, 64), qk)),
+        np.asarray(compression._quant_dequant_jnp(x.reshape(-1, 64), qk)),
+        atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# fused softmax-xent
+
+
+@pytest.mark.parametrize("t,d,v,bt,bv", [
+    (64, 32, 128, 32, 64),       # aligned
+    (100, 48, 300, 32, 64),      # odd T and V
+    (7, 16, 50, 32, 64),         # T < block_t, V < block_v
+    (128, 64, 1000, 64, 256),    # multi-tile vocab
+])
+def test_fused_ce_matches_ref_vjp(t, d, v, bt, bv):
+    key = jax.random.PRNGKey(21)
+    h = jax.random.normal(key, (t, d)) * 0.5
+    w = jax.random.normal(jax.random.fold_in(key, 1), (d, v)) * 0.1
+    labels = jax.random.randint(jax.random.fold_in(key, 2), (t,), 0, v)
+
+    def f_ker(h, w):
+        return ops.softmax_xent_tokens(h, w, labels, block_t=bt, block_v=bv)
+
+    def f_ref(h, w):
+        return softmax_xent_ref(h, w, labels)[0]
+
+    loss_k, vjp_k = jax.vjp(f_ker, h, w)
+    loss_r, vjp_r = jax.vjp(f_ref, h, w)
+    np.testing.assert_allclose(np.asarray(loss_k), np.asarray(loss_r),
+                               atol=1e-5, rtol=1e-5)
+    g = jax.random.normal(jax.random.fold_in(key, 3), (t,))
+    for name, a, r in zip(["dh", "dw"], vjp_k(g), vjp_r(g)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(r),
+                                   atol=ATOL, rtol=ATOL, err_msg=name)
+
+
+def test_chunked_ce_pallas_impl_matches_jnp_impl():
+    """The run.impls-selected kernel path == the checkpointed jnp oracle,
+    value and gradient, with a validity mask."""
+    key = jax.random.PRNGKey(31)
+    t, d, v = 90, 32, 250
+    h = jax.random.normal(key, (t, d)) * 0.5
+    w = jax.random.normal(jax.random.fold_in(key, 1), (d, v)) * 0.1
+    labels = jax.random.randint(jax.random.fold_in(key, 2), (t,), 0, v)
+    valid = (jnp.arange(t) % 5 != 0)
+
+    def mean_loss(impl):
+        def f(h, w):
+            per = losses.chunked_softmax_xent(h, w, labels, valid=valid,
+                                              chunk=32, impl=impl)
+            return per.mean()
+        return f
+
+    l_j, g_j = jax.value_and_grad(mean_loss("jnp"), argnums=(0, 1))(h, w)
+    l_p, g_p = jax.value_and_grad(mean_loss("pallas"), argnums=(0, 1))(h, w)
+    np.testing.assert_allclose(float(l_j), float(l_p), atol=1e-6)
+    for name, a, r in zip(["dh", "dw"], g_p, g_j):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(r),
+                                   atol=1e-5, rtol=1e-5, err_msg=name)
+
+
+def test_no_tv_logits_intermediate():
+    """The fused CE jaxpr never holds a [T, V] tensor (T = 4096 tokens,
+    V = 32k vocab) in either direction."""
+    t, d, v = 4096, 64, 32_768
+    h = jax.ShapeDtypeStruct((t, d), jnp.float32)
+    w = jax.ShapeDtypeStruct((d, v), jnp.float32)
+    labels = jax.ShapeDtypeStruct((t,), jnp.int32)
+
+    def loss(h, w, labels):
+        return ops.softmax_xent_tokens(h, w, labels).sum()
+
+    jaxpr = jax.make_jaxpr(
+        lambda h, w, labels: jax.grad(loss, argnums=(0, 1))(h, w, labels))(
+            h, w, labels)
+    shapes = _collect_avals(jaxpr.jaxpr, [])
+    big = [sh for sh in shapes if len(sh) >= 2 and sh[-2] >= t
+           and sh[-1] >= v]
+    assert not big, big

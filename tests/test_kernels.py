@@ -1,7 +1,6 @@
 """Pallas kernel validation: shape/dtype sweeps against the pure-jnp
 oracles in repro.kernels.ref, executed under interpret=True on CPU."""
-import hypothesis
-import hypothesis.strategies as st
+from _compat import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -57,6 +56,46 @@ def test_flash_masks(causal, window):
                               block_q=64, block_k=64, interpret=True)
     ref = flash_attention_ref(q, k, v, p, p, causal=causal, window=window)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+@pytest.mark.parametrize("sq,sk,bq,bk", [
+    (96, 96, 64, 64),        # seq not a block multiple
+    (70, 130, 64, 64),       # both axes odd
+    (3840, 0, 512, 512),     # VLM text region (4096 - 256), sk = sq
+])
+def test_flash_non_multiple_seq_lengths(sq, sk, bq, bk):
+    """Non-block-multiple sequence lengths run via grid padding + k_valid
+    masking instead of crashing the kernel path."""
+    sk = sk or sq
+    key = jax.random.PRNGKey(6)
+    b, h, kh, hd = 1, 2, 2, 16
+    q = jax.random.normal(key, (b, sq, h, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, sk, kh, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, sk, kh, hd))
+    qp = (jnp.arange(sq)[None] + (sk - sq)).astype(jnp.int32)
+    kp = jnp.arange(sk)[None].astype(jnp.int32)
+    out = flash_attention_fwd(q, k, v, qp, kp, causal=True,
+                              block_q=bq, block_k=bk, interpret=True)
+    ref = flash_attention_ref(q, k, v, qp, kp, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_flash_lse_residual_matches_ref():
+    """The forward's LSE output equals the materialized logsumexp of the
+    masked scores (the backward's correctness hinges on this)."""
+    key = jax.random.PRNGKey(8)
+    b, s, h, hd = 2, 128, 4, 32
+    q = jax.random.normal(key, (b, s, h, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, h, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, h, hd))
+    p = jnp.broadcast_to(jnp.arange(s)[None], (b, s)).astype(jnp.int32)
+    _, lse = flash_attention_fwd(q, k, v, p, p, causal=True, block_q=64,
+                                 block_k=64, return_lse=True, interpret=True)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) * (hd ** -0.5)
+    mask = jnp.arange(s)[None, :] <= jnp.arange(s)[:, None]
+    scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    ref = jax.nn.logsumexp(scores, axis=-1)
+    np.testing.assert_allclose(np.asarray(lse), np.asarray(ref), atol=2e-5)
 
 
 def test_flash_kv_validity_mask():

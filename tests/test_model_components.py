@@ -3,8 +3,7 @@ properties, MoE dense vs ragged dispatch, Mamba chunk invariance,
 tokenizers."""
 import dataclasses
 
-import hypothesis
-import hypothesis.strategies as st
+from _compat import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np

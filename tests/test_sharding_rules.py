@@ -10,8 +10,17 @@ from repro.configs import MPSLConfig, RunConfig, SHAPES
 from repro.models import model as M
 from repro.parallel import sharding
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+def _abstract_mesh(sizes, names):
+    """AbstractMesh across jax versions: (sizes, names) args on >= 0.5,
+    a single ((name, size), ...) shape tuple on 0.4.x."""
+    try:
+        return AbstractMesh(sizes, names)
+    except TypeError:
+        return AbstractMesh(tuple(zip(names, sizes)))
+
+
+MESH = _abstract_mesh((16, 16), ("data", "model"))
+MESH3 = _abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def test_resolve_divisibility_fallbacks():

@@ -1,8 +1,7 @@
 """Split/assemble, aggregation, fusion, losses, compression."""
 import dataclasses
 
-import hypothesis
-import hypothesis.strategies as st
+from _compat import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -186,3 +185,18 @@ def test_gradient_compression_applies_to_cotangent():
 def test_compressed_bytes_accounting():
     n = compression.compressed_bytes((4, 16, 128))
     assert n == 4 * 16 * 128 + 4 * 16 * 4
+
+
+@pytest.mark.parametrize("shape,bits,expect", [
+    # int8 uplink: 1 byte/elem + f32 scale per token (core.costs act_bytes=1)
+    ((4, 16, 128), 8, 4 * 16 * 128 + 4 * 16 * 4),
+    # int4: half-byte payload, same per-token scale overhead
+    ((4, 16, 128), 4, 4 * 16 * 128 // 2 + 4 * 16 * 4),
+    # bf16-equivalent wire size
+    ((4, 16, 128), 16, 4 * 16 * 128 * 2 + 4 * 16 * 4),
+    # sub-byte payload rounds UP to whole bytes on the wire
+    ((3, 33), 4, (3 * 33 * 4 + 7) // 8 + 3 * 4),
+])
+def test_compressed_bytes_arbitrary_bits(shape, bits, expect):
+    """Wire sizes pinned for the bit widths the cost model quotes."""
+    assert compression.compressed_bytes(shape, bits=bits) == expect

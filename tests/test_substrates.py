@@ -2,8 +2,7 @@
 checkpoint round-trips, optimizer, schedules."""
 import os
 
-import hypothesis
-import hypothesis.strategies as st
+from _compat import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np
