@@ -56,6 +56,9 @@ def main() -> None:
     # default standalone invocation (python -m benchmarks.kernel_bench)
     kernel_bench.run(cap=512 if args.fast else 4096)
     if not args.fast:
+        from benchmarks import pipeline_bench
+        # end-to-end step pipeline: sync vs prefetch vs overlapped
+        pipeline_bench.run(steps=20)
         T.table1_accuracy()
         T.table2_retrieval()
         T.table3_batch_size()

@@ -377,3 +377,44 @@ def init_state(params, frozen, seed: int = 0):
         "step": jnp.zeros((), jnp.int32),
         "rng": jax.random.PRNGKey(seed),
     }
+
+
+# ---------------------------------------------------------------------------
+# Jitted step: donation + placement
+
+
+def state_shardings(state, mesh):
+    """NamedShardings mirroring a train-step state: params/frozen/opt follow
+    the path-based param rules (opt moments mirror their params —
+    adamw_init zeros share shapes, so the same rule table resolves them);
+    step counter and rng replicate."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    rep = NamedSharding(mesh, P())
+    return {
+        "params": sharding.param_shardings(state["params"], mesh),
+        "frozen": sharding.param_shardings(state["frozen"], mesh),
+        "opt": {"mu": sharding.param_shardings(state["opt"]["mu"], mesh),
+                "nu": sharding.param_shardings(state["opt"]["nu"], mesh),
+                "count": rep},
+        "step": rep,
+        "rng": rep,
+    }
+
+
+def place_state(state, mesh=None):
+    """Commit a train-step state onto the mesh (or default device). A
+    committed input fixes the jitted step's input shardings, which is what
+    lets donation alias the output buffers exactly."""
+    if mesh is None:
+        return jax.tree_util.tree_map(jax.device_put, state)
+    sh = state_shardings(state, mesh)
+    return jax.tree_util.tree_map(jax.device_put, state, sh)
+
+
+def jit_train_step(step_fn, donate: bool = True):
+    """jit the train step with the state argument donated: params and
+    optimizer moments alias in place of double-allocating (2x param+opt
+    peak memory otherwise). The caller must drop its reference to the old
+    state each step — the Trainer's `state, metrics = step(state, batch)`
+    does; a second call on a donated handle raises."""
+    return jax.jit(step_fn, donate_argnums=(0,) if donate else ())

@@ -4,3 +4,4 @@ from repro.data.partition import dirichlet_partition
 from repro.data.synthetic import (SyntheticMultimodal, SyntheticLM,
                                   SyntheticRetrieval)
 from repro.data.loader import ClientLoader
+from repro.data.prefetch import PrefetchLoader

@@ -1,0 +1,109 @@
+"""Background-thread prefetching for step-indexed loaders.
+
+The MPSL data pipeline is *step-indexed*: ``loader.batch(k)`` is a pure
+function of (seed, k). That purity is what makes prefetch safe — the
+prefetcher speculatively assembles batches k+1..k+depth on a background
+thread while step k runs on device, and a restarted run (or a run with
+prefetch disabled) sees bitwise-identical batches, because batch contents
+never depend on consumption order or queue depth.
+
+``place_fn`` (e.g. ``repro.parallel.sharding.place_batch``) also runs on
+the prefetch thread, so H2D transfer overlaps device compute in addition
+to host batch assembly.
+
+Out-of-order requests — a checkpoint resume jumping backwards, or an
+evaluation loop re-reading a step — flush the speculation and reseed the
+producer at the requested step; the returned batch is still exactly
+``inner.batch(k)``.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Optional
+
+
+class PrefetchLoader:
+    """Wraps any step-indexed loader with a bounded producer queue.
+
+    depth=0 degrades to a synchronous passthrough (placement still
+    applied), which is what the determinism tests diff against.
+    """
+
+    def __init__(self, loader, depth: int = 2,
+                 place_fn: Optional[Callable] = None):
+        self.inner = loader
+        self.depth = int(depth)
+        self.place = place_fn if place_fn is not None else (lambda b: b)
+        self._q: Optional[queue.Queue] = None
+        self._thread: Optional[threading.Thread] = None
+        self._stop: Optional[threading.Event] = None
+        self._next_consume: Optional[int] = None
+
+    # -- consumer side -------------------------------------------------------
+
+    def batch(self, step: int):
+        if self.depth <= 0:
+            return self.place(self.inner.batch(step))
+        if self._thread is None or step != self._next_consume:
+            self._restart(step)
+        got, payload, err = self._q.get()
+        if err is not None:
+            self.close()
+            raise err
+        assert got == step, (got, step)
+        self._next_consume = step + 1
+        return payload
+
+    # -- producer side -------------------------------------------------------
+
+    def _restart(self, step: int):
+        self.close()
+        self._q = queue.Queue(maxsize=self.depth)
+        self._stop = threading.Event()
+        self._next_consume = step
+        self._thread = threading.Thread(
+            target=self._produce, args=(step, self._q, self._stop),
+            name="mpsl-prefetch", daemon=True)
+        self._thread.start()
+
+    def _produce(self, step: int, q: queue.Queue, stop: threading.Event):
+        while not stop.is_set():
+            try:
+                payload = self.place(self.inner.batch(step))
+            except BaseException as e:                 # surfaced to consumer
+                q.put((step, None, e))
+                return
+            while not stop.is_set():
+                try:
+                    q.put((step, payload, None), timeout=0.05)
+                    break
+                except queue.Full:
+                    continue
+            step += 1
+
+    def close(self):
+        """Stop the producer and drop speculative batches."""
+        if self._thread is None:
+            return
+        self._stop.set()
+        try:                                # unblock a producer stuck in put
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=5.0)
+        self._thread = None
+        self._q = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    def __del__(self):
+        try:
+            self.close()
+        except Exception:
+            pass

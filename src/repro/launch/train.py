@@ -18,7 +18,8 @@ import numpy as np
 
 from repro.configs import (MPSLConfig, RunConfig, SHAPES, get_config, reduced)
 from repro.core import mpsl, split
-from repro.data import ClientLoader, SyntheticLM, dirichlet_partition
+from repro.data import (ClientLoader, PrefetchLoader, SyntheticLM,
+                        dirichlet_partition)
 from repro.launch import mesh as mesh_lib
 from repro.optim import schedules
 from repro.parallel import sharding
@@ -60,6 +61,10 @@ def main(argv=None):
     p.add_argument("--ckpt-dir", default=None)
     p.add_argument("--ckpt-every", type=int, default=25)
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--prefetch", type=int, default=2,
+                   help="prefetch depth (0 = synchronous loader)")
+    p.add_argument("--no-donate", dest="donate", action="store_false",
+                   default=True, help="disable train-state buffer donation")
     args = p.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -75,19 +80,25 @@ def main(argv=None):
 
     key = jax.random.PRNGKey(args.seed)
     params, frozen, plan = split.init_mpsl_lm(key, cfg, run)
-    state = mpsl.init_state(params, frozen, args.seed)
+    state = mpsl.place_state(mpsl.init_state(params, frozen, args.seed))
     loss_fn = mpsl.make_lm_loss(cfg, run)
     sched = schedules.warmup_cosine(args.lr, 10, args.steps)
-    step_fn = jax.jit(mpsl.make_train_step(loss_fn, run, sched))
+    step_fn = mpsl.jit_train_step(mpsl.make_train_step(loss_fn, run, sched),
+                                  donate=args.donate)
 
-    loader = make_lm_loader(cfg, args.n_clients, args.batch_per_client,
-                            args.seq, args.seed, args.drop_prob)
+    loader = PrefetchLoader(
+        make_lm_loader(cfg, args.n_clients, args.batch_per_client,
+                       args.seq, args.seed, args.drop_prob),
+        depth=args.prefetch, place_fn=sharding.place_batch)
     trainer = Trainer(step_fn, state, loader,
                       TrainerConfig(total_steps=args.steps,
                                     ckpt_every=args.ckpt_every,
                                     ckpt_dir=args.ckpt_dir))
     result = trainer.run()
-    print(f"[train] done: final loss {result['final_loss']:.4f}")
+    loader.close()
+    print(f"[train] done: final loss {result['final_loss']:.4f} "
+          f"({result['steps_per_sec']:.2f} steps/s, "
+          f"host stall {100 * result['host_stall_frac']:.0f}%)")
     return 0
 
 

@@ -97,6 +97,38 @@ def shard_act(x, dims):
 
 
 # ---------------------------------------------------------------------------
+# Host batch placement (prefetch pipeline)
+
+
+def batch_specs(batch, mesh: Mesh):
+    """Per-leaf PartitionSpecs for an MPSL host batch: the leading axis of
+    every array is the client axis -> sharded over the mesh data axes when
+    divisible, everything else replicated."""
+    def rule(leaf):
+        shape = tuple(np.shape(leaf))
+        dims = ("client",) + (None,) * (len(shape) - 1)
+        return resolve_spec(mesh, shape, dims)
+    return jax.tree_util.tree_map(rule, batch)
+
+
+def place_batch(batch, mesh: Optional[Mesh] = None):
+    """``device_put`` a host batch directly onto the mesh's client/batch
+    layout (no uncommitted transfer + reshard at trace time). Off-mesh, a
+    plain committed ``device_put`` — still useful, because running it on
+    the prefetch thread overlaps H2D with device compute."""
+    mesh = mesh if mesh is not None else current_mesh()
+    if mesh is None or mesh.size == 1:
+        dev = (mesh.devices.flat[0] if mesh is not None
+               else jax.local_devices()[0])
+        return jax.tree_util.tree_map(
+            lambda v: jax.device_put(np.asarray(v), dev), batch)
+    return jax.tree_util.tree_map(
+        lambda v, spec: jax.device_put(np.asarray(v),
+                                       NamedSharding(mesh, spec)),
+        batch, batch_specs(batch, mesh))
+
+
+# ---------------------------------------------------------------------------
 # Parameter sharding rules (path-based)
 
 

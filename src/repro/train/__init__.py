@@ -1,2 +1,2 @@
-"""Training loop with fault tolerance."""
-from repro.train.trainer import Trainer, TrainerConfig
+"""Training loop with fault tolerance and sync-free metrics."""
+from repro.train.trainer import MetricsRing, Trainer, TrainerConfig

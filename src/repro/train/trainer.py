@@ -16,6 +16,16 @@ here on the host mesh):
     N_max so population changes don't recompile.
   * crash-consistency — checkpoint publishing is atomic (write-temp +
     rename); a kill at any point leaves a loadable directory.
+
+Pipeline overlap: the loop itself never forces a device sync. Metrics
+stay on device in a small ring (`MetricsRing`) and are read back only at
+log boundaries and at the end of the run, with an explicit
+`block_until_ready` on just that entry; per-step wall times are recorded
+from the host side without blocking (they measure dispatch, not device
+compute — the run-level `steps_per_sec` is the synchronized number).
+With a prefetching loader (`repro.data.PrefetchLoader`) and a donated
+step (`core.mpsl.jit_train_step`), host batch assembly, H2D transfer,
+and device compute all overlap.
 """
 from __future__ import annotations
 
@@ -31,6 +41,32 @@ from repro.checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
 from repro.core import aggregation, mpsl
 
 
+class MetricsRing:
+    """Fixed-size ring of on-device step metrics. Pushing never syncs;
+    reading blocks on exactly one entry. Keeping at most `size` metric
+    dicts alive bounds how many in-flight steps the host can run ahead."""
+
+    def __init__(self, size: int = 64):
+        self.size = size
+        self._slots = [None] * size
+
+    def push(self, step: int, metrics):
+        self._slots[step % self.size] = (step, metrics)
+
+    def latest(self):
+        live = [s for s in self._slots if s is not None]
+        return max(live, key=lambda s: s[0]) if live else None
+
+    def read_latest(self) -> Optional[Dict[str, Any]]:
+        """Host copy of the newest entry (blocks on that entry alone)."""
+        ent = self.latest()
+        if ent is None:
+            return None
+        step, m = ent
+        jax.block_until_ready(m)
+        return dict({k: np.asarray(v) for k, v in m.items()}, step=step)
+
+
 @dataclasses.dataclass
 class TrainerConfig:
     total_steps: int = 100
@@ -38,6 +74,7 @@ class TrainerConfig:
     ckpt_dir: Optional[str] = None
     keep: int = 3
     log_every: int = 10
+    metrics_ring: int = 64
 
 
 class Trainer:
@@ -51,6 +88,8 @@ class Trainer:
         self.ckpt = (AsyncCheckpointer(config.ckpt_dir, config.keep)
                      if config.ckpt_dir else None)
         self.metrics_history: list = []
+        self.ring = MetricsRing(config.metrics_ring)
+        self.step_times: list = []      # host dispatch time per step (s)
         self._maybe_resume()
 
     # -- fault tolerance ----------------------------------------------------
@@ -86,27 +125,48 @@ class Trainer:
 
     # -- loop ----------------------------------------------------------------
 
+    def _log_latest(self, total: int, t0: float):
+        m = self.ring.read_latest()          # the only mid-loop device sync
+        loss = float(m["loss"])
+        self.metrics_history.append({"step": int(m["step"]), "loss": loss})
+        self.log(f"[trainer] step {m['step']}/{total} "
+                 f"loss={loss:.4f} "
+                 f"clients={int(m['participating'])} "
+                 f"({time.perf_counter() - t0:.1f}s)")
+
     def run(self, steps: Optional[int] = None) -> Dict[str, Any]:
         total = steps if steps is not None else self.cfg.total_steps
-        t0 = time.time()
+        t0 = time.perf_counter()
         start = int(self.state["step"])
+        host_s = 0.0                    # time spent assembling/placing input
         for i in range(start, total):
+            t_step = time.perf_counter()
             batch = self.loader.batch(i)
             batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            t_in = time.perf_counter()
+            host_s += t_in - t_step
             self.state, metrics = self.step_fn(self.state, batch)
+            self.ring.push(i + 1, metrics)
+            self.step_times.append(time.perf_counter() - t_step)
             if (i + 1) % self.cfg.log_every == 0 or i == start:
-                loss = float(metrics["loss"])
-                self.log(f"[trainer] step {i + 1}/{total} "
-                         f"loss={loss:.4f} "
-                         f"clients={int(metrics['participating'])} "
-                         f"({time.time() - t0:.1f}s)")
-                self.metrics_history.append(
-                    {"step": i + 1, "loss": loss})
+                self._log_latest(total, t0)
             if self.ckpt and (i + 1) % self.cfg.ckpt_every == 0:
                 self.ckpt.save(i + 1, self.state)
+        # final readback reflects the LAST step, not the last logged step
+        final = self.ring.read_latest()
+        if final is not None and (not self.metrics_history or
+                                  self.metrics_history[-1]["step"]
+                                  < int(final["step"])):
+            self.metrics_history.append({"step": int(final["step"]),
+                                         "loss": float(final["loss"])})
+        wall = time.perf_counter() - t0
         if self.ckpt:
             self.ckpt.save(total, self.state)
             self.ckpt.wait()
-        return {"final_loss": (self.metrics_history[-1]["loss"]
-                               if self.metrics_history else None),
-                "history": self.metrics_history}
+        ran = total - start
+        return {"final_loss": (float(final["loss"])
+                               if final is not None else None),
+                "history": self.metrics_history,
+                "steps_per_sec": (ran / wall) if wall > 0 and ran else 0.0,
+                "host_stall_frac": (host_s / wall) if wall > 0 else 0.0,
+                "wall_s": wall}

@@ -7,7 +7,8 @@ import pytest
 
 from repro.configs import MPSLConfig, RunConfig, SHAPES, get_config, reduced
 from repro.core import mpsl, split
-from repro.data import ClientLoader, SyntheticLM, dirichlet_partition
+from repro.data import (ClientLoader, PrefetchLoader, SyntheticLM,
+                        dirichlet_partition)
 from repro.launch.train import make_lm_loader
 from repro.optim import schedules
 from repro.train import Trainer, TrainerConfig
@@ -49,6 +50,47 @@ def test_restart_is_bitwise_identical(tmp_path):
     t3 = Trainer(step_fn3, state3, loader3, tc3, log_fn=lambda s: None)
     assert int(t3.state["step"]) == 3
     t3.run(6)
+
+    for a, b in zip(jax.tree_util.tree_leaves(straight["params"]),
+                    jax.tree_util.tree_leaves(t3.state["params"])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=0, rtol=0)
+
+
+def test_restart_with_prefetch_is_bitwise_identical(tmp_path):
+    """The fault-tolerance invariant survives the overlapped pipeline: a
+    straight un-prefetched run vs a prefetched + donated crash+resume run
+    land on identical parameters (the restarted prefetcher consumes
+    exactly the batches the failed run would have)."""
+    _, state, step_fn, loader, tc = _setup(tmp_path / "a", steps=6)
+    t = Trainer(step_fn, state, loader, tc, log_fn=lambda s: None)
+    t.run()
+    straight = t.state
+
+    def overlapped(path):
+        cfg, state, _, loader, tc = _setup(path, steps=6)
+        run = RunConfig(model=cfg, shape=SHAPES["train_4k"],
+                        mpsl=MPSLConfig(n_clients=4, trainable_blocks=1,
+                                        head_adapter_rank=4),
+                        compute_dtype="float32", learning_rate=1e-3)
+        loss_fn = mpsl.make_lm_loss(cfg, run)
+        step = mpsl.jit_train_step(
+            mpsl.make_train_step(loss_fn, run, schedules.constant(1e-3)),
+            donate=True)
+        pf = PrefetchLoader(loader, depth=3)
+        return Trainer(step, mpsl.place_state(state), pf, tc,
+                       log_fn=lambda s: None), pf
+
+    t2, pf2 = overlapped(tmp_path / "b")
+    t2.run(3)
+    t2.checkpoint_now()
+    t2.ckpt.wait()
+    pf2.close()                                 # "crash" mid-stream
+    t3, pf3 = overlapped(tmp_path / "b")
+    assert int(t3.state["step"]) == 3
+    t3.run(6)
+    pf3.close()
 
     for a, b in zip(jax.tree_util.tree_leaves(straight["params"]),
                     jax.tree_util.tree_leaves(t3.state["params"])):
