@@ -1,9 +1,11 @@
 """Fused-vs-unfused kernel benchmark -> BENCH_kernels.json.
 
 For each kernel on the MPSL hot loop (flash attention, the quant8 link
-compressor, the fused softmax-xent head) this times the fused Pallas
-lowering against the unfused jnp lowering at the three assigned cell
-shapes (train_4k / prefill_32k / decode_32k) and records, per entry:
+compressor, the fused softmax-xent head, the selective-scan backward)
+this times the fused Pallas lowering against the baseline lowering
+(unfused jnp, or recompute-through-ref VJP for the scan backward) at the
+three assigned cell shapes (train_4k / prefill_32k / decode_32k) and
+records, per entry:
 
   * wall_us             - median wall time (benchmarks.common.time_fn)
   * bytes_moved         - analytic HBM traffic model for the lowering
@@ -20,8 +22,10 @@ tractable; capped entries record the original cell length.
 Traffic model: f32 words x 4 bytes, counting one read and one write per
 elementwise pass and re-reads of streamed tiles (k/v per q-block sweep,
 w per token-tile sweep). Fused lowerings never materialize the [Sq,Sk]
-score matrix or the [T,V] logit matrix; the unfused models charge those
-at one write plus the softmax passes that re-read them.
+score matrix, the [T,V] logit matrix, or the [B,S,d_inner,d_state] scan
+state history; the baseline models charge those at one write plus the
+passes that re-read them (the recompute-through-ref scan VJP saves the
+per-step state and decay as full-history residuals).
 """
 from __future__ import annotations
 
@@ -84,6 +88,38 @@ def _ce_bytes(lowering: str, t, d, v, bt, bv, grad: bool) -> int:
     if not grad:
         return fwd
     return fwd + (t * d + d * v + 4 * tv + t * d + d * v) * F32
+
+
+def _scan_bytes(lowering: str, b, s, di, ds, chunk, block_d,
+                grad: bool) -> int:
+    nc, nd = -(-s // chunk), -(-di // block_d)
+    state = b * di * ds                            # one carried SSM state
+    # x/dt read once per d-block's grid row; b_in/c_in re-streamed per
+    # d-block sweep; y write; h_final + per-chunk-boundary checkpoints
+    fwd = b * s * 2 * di + nd * b * s * 2 * ds + di * ds \
+        + b * s * di + state + nc * state
+    if lowering == "fused":
+        if not grad:
+            return fwd * F32
+        # backward re-streams the inputs and the nc checkpoints and reads
+        # gy/gh; the in-chunk state recompute lives in VMEM scratch and
+        # never touches HBM. Writes: dx, ddt, per-d-block dB/dC partials,
+        # per-batch dA_log partials, dh0.
+        bwd = (b * s * 2 * di + nd * b * s * 2 * ds + di * ds + nc * state
+               + b * s * di + state)
+        bwd += 2 * b * s * di + 2 * nd * b * s * ds + b * di * ds + state
+        return (fwd + bwd) * F32
+    # recompute-through-ref VJP: the lax.scan linearization saves the full
+    # state history h_t and the decay a_t = exp(dt A) as [B,S,di,ds]
+    # residuals -- one write each forward, re-read (h twice: dC and the
+    # lambda sweep) on the backward pass.
+    hist = b * s * di * ds
+    seq_io = b * s * (2 * di + 2 * ds) + di * ds
+    fwd_r = seq_io + b * s * di + state + 2 * hist
+    if not grad:
+        return fwd_r * F32
+    bwd_r = seq_io + 4 * hist + 2 * b * s * di + 2 * b * s * ds + state
+    return (fwd_r + bwd_r) * F32
 
 
 # ---------------------------------------------------------------------------
@@ -205,20 +241,55 @@ def run(out: str = "BENCH_kernels.json", cap: int = 4096,
                    h, w, nbytes=_ce_bytes("unfused", t, d_model, vocab,
                                           bt, bv, True))
 
+        # ---- selective-scan backward (train cells only: fused adjoint
+        # kernel vs the recompute-through-ref VJP it replaced). The scan
+        # axis gets its own tighter cap: the reverse-sweep kernel under
+        # interpret=True is far slower per token than flash.
+        if grad:
+            ss = min(cell["seq"], 1024)
+            di, ds, ck, bd = 256, 16, 256, 128
+            sk_ = jax.random.fold_in(key, 9)
+            xs = jax.random.normal(sk_, (1, ss, di), jnp.float32) * 0.5
+            dts = jax.nn.softplus(jax.random.normal(
+                jax.random.fold_in(sk_, 1), (1, ss, di), jnp.float32)) * 0.1
+            bi_ = jax.random.normal(jax.random.fold_in(sk_, 2), (1, ss, ds))
+            ci_ = jax.random.normal(jax.random.fold_in(sk_, 3), (1, ss, ds))
+            al_ = jnp.log(jnp.abs(jax.random.normal(
+                jax.random.fold_in(sk_, 4), (di, ds))) + 0.5)
+
+            def scan_grad(bwd):
+                return jax.jit(jax.grad(
+                    lambda x, dt: ops.selective_scan(
+                        x, dt, bi_, ci_, al_, None, ck, bd, bwd)[0].sum(),
+                    argnums=(0, 1)))
+
+            scell = dict(cell, seq=ss)
+            sshape = dict(b=1, s=ss, di=di, ds=ds, chunk=ck, block_d=bd,
+                          grad=True)
+            record("selective_scan_bwd", scell, "fused_pallas", sshape,
+                   scan_grad("fused"), xs, dts,
+                   nbytes=_scan_bytes("fused", 1, ss, di, ds, ck, bd, True))
+            record("selective_scan_bwd", scell, "recompute_ref", sshape,
+                   scan_grad("recompute"), xs, dts,
+                   nbytes=_scan_bytes("recompute", 1, ss, di, ds, ck, bd,
+                                      True))
+
     by_key = {}
     for e in entries:
         by_key.setdefault((e["kernel"], e["cell"]), {})[e["lowering"]] = e
-    summary = {
-        f"{k}/{c}": dict(
+    summary = {}
+    for (k, c), p in by_key.items():
+        others = [l for l in p if l != "fused_pallas"]
+        if "fused_pallas" not in p or len(others) != 1:
+            continue
+        base = p[others[0]]
+        summary[f"{k}/{c}"] = dict(
             fused_bytes=p["fused_pallas"]["bytes_moved"],
-            unfused_bytes=p["unfused_jnp"]["bytes_moved"],
-            fused_beats_unfused_bytes=(
-                p["fused_pallas"]["bytes_moved"]
-                < p["unfused_jnp"]["bytes_moved"]),
+            baseline_lowering=others[0],
+            baseline_bytes=base["bytes_moved"],
+            fused_beats_baseline_bytes=(
+                p["fused_pallas"]["bytes_moved"] < base["bytes_moved"]),
         )
-        for (k, c), p in by_key.items()
-        if {"fused_pallas", "unfused_jnp"} <= p.keys()
-    }
     doc = dict(
         meta=dict(
             backend=jax.default_backend(), interpret=interpret, cap=cap,

@@ -182,6 +182,10 @@ class RunConfig:
     moe_capacity: float = 2.0           # EP per-expert capacity slack
     ssm_impl: str = "jnp"               # jnp | pallas
     ssm_chunk: int = 256                # selective-scan chunk length
+    # selective-scan backward lowering (pallas path only): 'fused' runs the
+    # checkpointed-recompute adjoint kernel; 'recompute' falls back to
+    # jax.vjp through the jnp reference (the pre-fusion oracle path)
+    ssm_bwd_impl: str = "fused"
     ce_impl: str = "jnp"                # jnp | pallas (fused LM-head CE)
     ce_chunk: int = 512                 # chunked-CE token block
     # sequence-parallel residual activations (Korthikanti-style SP): the
@@ -205,6 +209,7 @@ class RunConfig:
                 "moe": self.moe_impl, "moe_capacity": self.moe_capacity,
                 "ssm": self.ssm_impl,
                 "ssm_chunk": self.ssm_chunk,
+                "ssm_bwd": self.ssm_bwd_impl,
                 "ce": self.ce_impl,
                 "unroll_layers": self.unroll_layers,
                 "attn_seq_shard": self.attn_seq_shard,

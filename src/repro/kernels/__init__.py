@@ -25,10 +25,15 @@ Kernel coverage (fused forward / fused backward):
                     hardware PRNG when compiled and a threaded
                     jax.random key in interpret mode (the pltpu PRNG
                     primitives have no CPU lowering).
-  selective_scan  — fwd only. Mamba recurrence with VMEM-resident state,
-                    chunked along the sequential grid axis; the backward
-                    is a recompute-through-reference VJP (fused bwd is an
-                    open ROADMAP item).
+  selective_scan  — fwd + bwd. Mamba recurrence with VMEM-resident state,
+                    chunked along the sequential grid axis. The forward
+                    emits per-chunk-boundary state checkpoints
+                    [B, nchunks, di, ds]; the backward sweeps chunks in
+                    reverse, recomputes the in-chunk states from each
+                    checkpoint into VMEM scratch and runs the adjoint
+                    recurrence, so no [B, S, di, ds] state history exists
+                    in either direction (run.impls["ssm_bwd"] falls back
+                    to the recompute-through-reference VJP).
 
 Interpret-mode caveats: grids execute sequentially in Python (orders of
 magnitude slower than compiled — benchmark numbers from CPU measure

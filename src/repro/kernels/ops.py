@@ -1,10 +1,11 @@
 """Jit'd public wrappers around the Pallas kernels.
 
-Training-grade custom VJPs: flash attention and the fused softmax-xent
-run Pallas kernels in BOTH directions (the backward recomputes
-probabilities blockwise from the forward's LSE residual — nothing
-[S, S]- or [T, V]-shaped is ever live). The selective scan keeps the
-recompute-through-reference backward; quant-dequant is straight-through.
+Training-grade custom VJPs: flash attention, the fused softmax-xent and
+the selective scan run Pallas kernels in BOTH directions (flash/CE
+recompute probabilities blockwise from the forward's LSE residual; the
+scan recomputes in-chunk states from per-chunk boundary checkpoints —
+nothing [S, S]-, [T, V]- or [B, S, di, ds]-shaped is ever live).
+Quant-dequant is straight-through.
 On this CPU container kernels execute in interpret mode; on TPU
 `interpret=False`.
 
@@ -112,49 +113,51 @@ _softmax_xent.defvjp(_sx_fwd, _sx_bwd)
 # selective scan
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(6,))
-def selective_scan(x, dt, b_in, c_in, a_log, h0=None, chunk=256):
-    y, h_final = _ss.selective_scan_fwd(x, dt, b_in, c_in, a_log,
-                                        chunk=chunk, interpret=INTERPRET)
-    if h0 is not None:
-        # recurrence is linear in h: add the h0 propagation analytically
-        y0, hf0 = _h0_propagation(dt, c_in, a_log, h0)
-        y = y + y0.astype(y.dtype)
-        h_final = h_final + hf0
-    return y, h_final
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8))
+def selective_scan(x, dt, b_in, c_in, a_log, h0=None, chunk=256,
+                   block_d=512, bwd="fused"):
+    """Fused chunked scan; a nonzero h0 seeds the kernel's VMEM state
+    directly (no jnp [B,S,di,ds] propagation term).
+
+    ``bwd`` selects the backward lowering (run.impls["ssm_bwd"]):
+    "fused" sweeps chunks in reverse through the Pallas adjoint kernel,
+    recomputing in-chunk states from the forward's boundary checkpoints;
+    "recompute" is the legacy jax.vjp through the jnp reference (kept as
+    the oracle / fallback)."""
+    return _ss.selective_scan_fwd(x, dt, b_in, c_in, a_log, h0,
+                                  chunk=chunk, block_d=block_d,
+                                  interpret=INTERPRET)
 
 
-def _h0_propagation(dt, c_in, a_log, h0):
-    """Contribution of a nonzero initial state: h_t += (prod_{s<=t} a_s) h0,
-    so y_t += C_t . (cumprod a) h0."""
-    a_neg = -jnp.exp(a_log.astype(jnp.float32))
-    loga = dt.astype(jnp.float32)[..., None] * a_neg     # [B,S,di,ds]
-    cum = jnp.cumsum(loga, axis=1)
-    hprop = jnp.exp(cum) * h0.astype(jnp.float32)[:, None]
-    y0 = jnp.einsum("bsnd,bsd->bsn", hprop, c_in.astype(jnp.float32))
-    return y0, hprop[:, -1]
+def _ss_fwd(x, dt, b_in, c_in, a_log, h0, chunk, block_d, bwd):
+    y, h_final, h_ckpt = _ss.selective_scan_fwd(
+        x, dt, b_in, c_in, a_log, h0, chunk=chunk, block_d=block_d,
+        return_ckpt=True, interpret=INTERPRET)
+    return (y, h_final), (x, dt, b_in, c_in, a_log, h0, h_ckpt)
 
 
-def _ss_fwd(x, dt, b_in, c_in, a_log, h0, chunk):
-    out = selective_scan(x, dt, b_in, c_in, a_log, h0, chunk)
-    return out, (x, dt, b_in, c_in, a_log, h0)
-
-
-def _ss_bwd(chunk, res, g):
-    x, dt, b_in, c_in, a_log, h0 = res
+def _ss_bwd(chunk, block_d, bwd, res, g):
+    x, dt, b_in, c_in, a_log, h0, h_ckpt = res
     gy, gh = g
 
-    if h0 is None:
-        def f(x, dt, b_in, c_in, a_log):
-            return _ref.selective_scan_ref(x, dt, b_in, c_in, a_log)
-        _, vjp = jax.vjp(f, x, dt, b_in, c_in, a_log)
-        grads = vjp((gy, gh))
-        return grads + (None,)
+    if bwd == "recompute":
+        if h0 is None:
+            def f(x, dt, b_in, c_in, a_log):
+                return _ref.selective_scan_ref(x, dt, b_in, c_in, a_log)
+            _, vjp = jax.vjp(f, x, dt, b_in, c_in, a_log)
+            return vjp((gy, gh)) + (None,)
 
-    def f(x, dt, b_in, c_in, a_log, h0):
-        return _ref.selective_scan_ref(x, dt, b_in, c_in, a_log, h0)
-    _, vjp = jax.vjp(f, x, dt, b_in, c_in, a_log, h0)
-    return vjp((gy, gh))
+        def f(x, dt, b_in, c_in, a_log, h0):
+            return _ref.selective_scan_ref(x, dt, b_in, c_in, a_log, h0)
+        _, vjp = jax.vjp(f, x, dt, b_in, c_in, a_log, h0)
+        return vjp((gy, gh))
+
+    dx, ddt, db, dc, da_log, dh0 = _ss.selective_scan_bwd(
+        x, dt, b_in, c_in, a_log, h_ckpt, gy, gh, chunk=chunk,
+        block_d=block_d, interpret=INTERPRET)
+    return (dx, ddt, db.astype(b_in.dtype), dc.astype(c_in.dtype),
+            da_log.astype(a_log.dtype),
+            None if h0 is None else dh0.astype(h0.dtype))
 
 
 selective_scan.defvjp(_ss_fwd, _ss_bwd)

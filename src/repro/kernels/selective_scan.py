@@ -1,4 +1,4 @@
-"""Mamba selective scan as a Pallas TPU kernel.
+"""Mamba selective scan as a Pallas TPU kernel — fused fwd AND bwd.
 
 TPU adaptation: the CUDA Mamba kernel relies on warp-level parallel scans
 in shared memory; the TPU analogue blocks d_inner across the parallel
@@ -7,6 +7,18 @@ the SSM state h [block_d, d_state] living in VMEM scratch across chunks
 (revolving state). Within a chunk the recurrence is stepped by a
 fori_loop on the VPU — d_state(16) x block_d lanes per step keep the
 vector units busy while the state never leaves VMEM.
+
+Checkpointed-recompute memory model (backward): the forward additionally
+emits the chunk-boundary states ``h_ckpt [B, nchunks, di, ds]`` (the state
+*entering* each chunk — ``h_ckpt[:, 0]`` is h0). The backward sweeps the
+chunk axis in REVERSE along the sequential grid axis; inside each chunk it
+recomputes the per-step states from that chunk's checkpoint into a
+``[chunk, block_d, d_state]`` VMEM scratch, then runs the adjoint
+recurrence backward through the chunk, carrying the state cotangent
+lambda in VMEM across chunks. Nothing ``[B, S, di, ds]``-shaped ever
+materializes in either direction: the residual footprint is the inputs
+plus ``h_ckpt`` (S/chunk times smaller than the full state history), and
+the live backward working set is one chunk of recomputed states.
 
 Grid: (B, d_inner / block_d, S / chunk)   (last axis sequential on TPU)
 """
@@ -20,15 +32,18 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(x_ref, dt_ref, b_ref, c_ref, a_ref,      # inputs
-            y_ref, hout_ref,                          # outputs
-            h_ref,                                    # scratch [bd, ds]
+def _kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, h0_ref,   # inputs
+            y_ref, hout_ref, hckpt_ref,                   # outputs
+            h_ref,                                        # scratch [bd, ds]
             *, nchunks: int, chunk: int):
     ic = pl.program_id(2)
 
     @pl.when(ic == 0)
     def _init():
-        h_ref[...] = jnp.zeros_like(h_ref)
+        h_ref[...] = h0_ref[0].astype(jnp.float32)
+
+    # checkpoint the state ENTERING this chunk (bwd recomputes from here)
+    hckpt_ref[0, 0] = h_ref[...]
 
     a_neg = -jnp.exp(a_ref[...].astype(jnp.float32))      # [bd, ds]
 
@@ -50,23 +65,32 @@ def _kernel(x_ref, dt_ref, b_ref, c_ref, a_ref,      # inputs
         hout_ref[0, :, :] = h
 
 
-def selective_scan_fwd(x, dt, b_in, c_in, a_log, h0=None, *,
-                       chunk: int = 256, block_d: int = 512,
-                       interpret: bool = False):
-    """x, dt [B,S,di]; b_in, c_in [B,S,ds]; a_log [di,ds].
-
-    Returns (y [B,S,di], h_final [B,di,ds]). h0 nonzero is handled by the
-    wrapper (ops.selective_scan) via the linearity of the recurrence."""
-    bsz, s, di = x.shape
-    ds = b_in.shape[-1]
+def _resolve_blocks(s, di, chunk, block_d):
     block_d = min(block_d, di)
     chunk = min(chunk, s)
     assert di % block_d == 0 and s % chunk == 0, (di, block_d, s, chunk)
+    return chunk, block_d
+
+
+def selective_scan_fwd(x, dt, b_in, c_in, a_log, h0=None, *,
+                       chunk: int = 256, block_d: int = 512,
+                       interpret: bool = False, return_ckpt: bool = False):
+    """x, dt [B,S,di]; b_in, c_in [B,S,ds]; a_log [di,ds]; h0 [B,di,ds].
+
+    Returns (y [B,S,di], h_final [B,di,ds]) — plus the chunk-boundary
+    checkpoints h_ckpt [B, nchunks, di, ds] when ``return_ckpt`` (the
+    backward's residual)."""
+    bsz, s, di = x.shape
+    ds = b_in.shape[-1]
+    chunk, block_d = _resolve_blocks(s, di, chunk, block_d)
     nd, nc = di // block_d, s // chunk
+
+    h0_arr = (jnp.zeros((bsz, di, ds), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
 
     grid = (bsz, nd, nc)
     kernel = functools.partial(_kernel, nchunks=nc, chunk=chunk)
-    y, h_final = pl.pallas_call(
+    y, h_final, h_ckpt = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -75,16 +99,148 @@ def selective_scan_fwd(x, dt, b_in, c_in, a_log, h0=None, *,
             pl.BlockSpec((1, chunk, ds), lambda b, d, c: (b, c, 0)),
             pl.BlockSpec((1, chunk, ds), lambda b, d, c: (b, c, 0)),
             pl.BlockSpec((block_d, ds), lambda b, d, c: (d, 0)),
+            pl.BlockSpec((1, block_d, ds), lambda b, d, c: (b, d, 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, chunk, block_d), lambda b, d, c: (b, c, d)),
             pl.BlockSpec((1, block_d, ds), lambda b, d, c: (b, d, 0)),
+            pl.BlockSpec((1, 1, block_d, ds), lambda b, d, c: (b, c, d, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((bsz, s, di), x.dtype),
             jax.ShapeDtypeStruct((bsz, di, ds), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, nc, di, ds), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((block_d, ds), jnp.float32)],
         interpret=interpret,
-    )(x, dt, b_in, c_in, a_log)
+    )(x, dt, b_in, c_in, a_log, h0_arr)
+    if return_ckpt:
+        return y, h_final, h_ckpt
     return y, h_final
+
+
+def _bwd_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, hk_ref, gy_ref, gh_ref,
+                dx_ref, ddt_ref, db_ref, dc_ref, da_ref, dh0_ref,
+                hs_ref, g_ref,
+                *, nchunks: int, chunk: int):
+    """Adjoint of the chunked recurrence, chunks visited in REVERSE.
+
+    For h_t = a_t h_{t-1} + (dt_t x_t) B_t, y_t = h_t . C_t the state
+    cotangent obeys lambda_t = a_{t+1} lambda_{t+1} + gy_t C_t; the carry
+    g = a_t lambda_t flows right-to-left across chunks in VMEM (and is the
+    h0 cotangent once chunk 0 has been processed)."""
+    ic = pl.program_id(2)
+
+    a_neg = -jnp.exp(a_ref[...].astype(jnp.float32))      # A  [bd, ds]
+    h_entry = hk_ref[0, 0]                                # state entering chunk
+
+    # 1) recompute the in-chunk states from the boundary checkpoint
+    def fwd_step(t, h):
+        xt = x_ref[0, t, :].astype(jnp.float32)
+        dtt = dt_ref[0, t, :].astype(jnp.float32)
+        bt = b_ref[0, t, :].astype(jnp.float32)
+        a = jnp.exp(dtt[:, None] * a_neg)
+        h = a * h + (dtt * xt)[:, None] * bt[None, :]
+        hs_ref[t] = h
+        return h
+
+    jax.lax.fori_loop(0, chunk, fwd_step, h_entry)
+
+    @pl.when(ic == 0)
+    def _init():
+        g_ref[...] = gh_ref[0]                            # lambda from h_final
+        da_ref[...] = jnp.zeros_like(da_ref)
+
+    # 2) adjoint sweep, t = chunk-1 .. 0
+    def bwd_step(i, carry):
+        g, da = carry
+        t = chunk - 1 - i
+        xt = x_ref[0, t, :].astype(jnp.float32)
+        dtt = dt_ref[0, t, :].astype(jnp.float32)
+        bt = b_ref[0, t, :].astype(jnp.float32)
+        ct = c_ref[0, t, :].astype(jnp.float32)
+        gyt = gy_ref[0, t, :].astype(jnp.float32)
+        ht = hs_ref[t]
+        hprev = jnp.where(t == 0, h_entry, hs_ref[jnp.maximum(t - 1, 0)])
+
+        lam = g + gyt[:, None] * ct[None, :]              # [bd, ds]
+        a = jnp.exp(dtt[:, None] * a_neg)
+        sb = lam @ bt                                     # [bd]
+        dadt = lam * hprev * a                            # d(a_t), times a_t
+
+        dc_ref[0, 0, t, :] = gyt @ ht
+        db_ref[0, 0, t, :] = (dtt * xt) @ lam
+        dx_ref[0, t, :] = (dtt * sb).astype(dx_ref.dtype)
+        ddt_ref[0, t, :] = (xt * sb + (dadt * a_neg).sum(-1)
+                            ).astype(ddt_ref.dtype)
+        da = da + dadt * dtt[:, None] * a_neg             # dA_log = dA * A
+        return a * lam, da
+
+    g, da = jax.lax.fori_loop(
+        0, chunk, bwd_step,
+        (g_ref[...], jnp.zeros(h_entry.shape, jnp.float32)))
+    g_ref[...] = g
+    da_ref[0] += da
+
+    @pl.when(ic == nchunks - 1)
+    def _final():
+        dh0_ref[0] = g                                    # = a_0 lambda_0
+
+
+def selective_scan_bwd(x, dt, b_in, c_in, a_log, h_ckpt, gy, gh, *,
+                       chunk: int = 256, block_d: int = 512,
+                       interpret: bool = False):
+    """Fused backward. Returns (dx, ddt, dB, dC, dA_log, dh0); dx/ddt in
+    the input dtypes, the rest f32 (caller casts). dB/dC are accumulated
+    over d_inner blocks and dA_log over batch OUTSIDE the kernel — those
+    partials are [B, nd, S, ds] / [B, di, ds], never [B, S, di, ds]."""
+    bsz, s, di = x.shape
+    ds = b_in.shape[-1]
+    chunk, block_d = _resolve_blocks(s, di, chunk, block_d)
+    nd, nc = di // block_d, s // chunk
+
+    grid = (bsz, nd, nc)
+    kernel = functools.partial(_bwd_kernel, nchunks=nc, chunk=chunk)
+    rev = pl.BlockSpec((1, chunk, block_d),
+                       lambda b, d, c: (b, nc - 1 - c, d))
+    rev_state = pl.BlockSpec((1, chunk, ds),
+                             lambda b, d, c: (b, nc - 1 - c, 0))
+    dx, ddt, db_blk, dc_blk, da_blk, dh0 = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            rev, rev, rev_state, rev_state,
+            pl.BlockSpec((block_d, ds), lambda b, d, c: (d, 0)),
+            pl.BlockSpec((1, 1, block_d, ds),
+                         lambda b, d, c: (b, nc - 1 - c, d, 0)),
+            rev,
+            pl.BlockSpec((1, block_d, ds), lambda b, d, c: (b, d, 0)),
+        ],
+        out_specs=[
+            rev, rev,
+            pl.BlockSpec((1, 1, chunk, ds),
+                         lambda b, d, c: (b, d, nc - 1 - c, 0)),
+            pl.BlockSpec((1, 1, chunk, ds),
+                         lambda b, d, c: (b, d, nc - 1 - c, 0)),
+            pl.BlockSpec((1, block_d, ds), lambda b, d, c: (b, d, 0)),
+            pl.BlockSpec((1, block_d, ds), lambda b, d, c: (b, d, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, s, di), x.dtype),
+            jax.ShapeDtypeStruct((bsz, s, di), dt.dtype),
+            jax.ShapeDtypeStruct((bsz, nd, s, ds), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, nd, s, ds), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, di, ds), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, di, ds), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((chunk, block_d, ds), jnp.float32),   # in-chunk states
+            pltpu.VMEM((block_d, ds), jnp.float32),          # lambda carry
+        ],
+        interpret=interpret,
+    )(x, dt, b_in, c_in, a_log, h_ckpt, gy,
+      gh.astype(jnp.float32))
+    db = db_blk.sum(axis=1)                                  # [B, S, ds]
+    dc = dc_blk.sum(axis=1)
+    da_log = da_blk.sum(axis=0)                              # [di, ds]
+    return dx, ddt, db, dc, da_log, dh0

@@ -24,7 +24,8 @@ def init_hybrid(key, cfg):
 
 
 def apply_hybrid(params, x, cfg, *, positions, is_global, cache=None,
-                 impl="auto", ssm_impl="jnp", seq_shard=False):
+                 impl="auto", ssm_impl="jnp", ssm_bwd="fused",
+                 seq_shard=False):
     """x [B, S, D] -> (y, new_cache). cache = {'kv': ..., 'ssm': ...}.
 
     is_global: static bool — full attention vs sliding window."""
@@ -36,7 +37,8 @@ def apply_hybrid(params, x, cfg, *, positions, is_global, cache=None,
         params["attn"], x, cfg, positions=positions, causal=True,
         window=window, cache=kv_cache, impl=impl, seq_shard=seq_shard)
     s_out, ssm_new = mamba.apply_mamba(
-        params["ssm"], x, cfg, cache=ssm_cache, impl=ssm_impl)
+        params["ssm"], x, cfg, cache=ssm_cache, impl=ssm_impl,
+        bwd_impl=ssm_bwd)
 
     a_out = layers.rms_norm(a_out, params["attn_norm"]["scale"])
     s_out = layers.rms_norm(s_out, params["ssm_norm"]["scale"])

@@ -138,7 +138,8 @@ def _causal_depthwise_conv(x, w, b):
     return out + b.astype(x.dtype)
 
 
-def apply_mamba(params, x, cfg, cache=None, impl="jnp", chunk=256):
+def apply_mamba(params, x, cfg, cache=None, impl="jnp", chunk=256,
+                bwd_impl="fused"):
     """x [B, S, D] -> (y [B, S, D], new_cache)."""
     d = x.shape[-1]
     di = cfg.ssm.expand * d
@@ -175,7 +176,7 @@ def apply_mamba(params, x, cfg, cache=None, impl="jnp", chunk=256):
             from repro.kernels import ops as kops
             y, h_final = kops.selective_scan(xc, dt, b_in, c_in,
                                              params["A_log"], h0=h0,
-                                             chunk=chunk)
+                                             chunk=chunk, bwd=bwd_impl)
         else:
             y, h_final = chunked_selective_scan(xc, dt, b_in, c_in,
                                                 params["A_log"], h0=h0,

@@ -112,13 +112,15 @@ def apply_block(params, x, cfg, kind: BlockKind, *, positions, cache=None,
     if kind.family == "ssm":
         out, new_cache = mamba.apply_mamba(
             params["ssm"], h, cfg, cache=cache,
-            impl=impls.get("ssm", "jnp"), chunk=impls.get("ssm_chunk", 256))
+            impl=impls.get("ssm", "jnp"), chunk=impls.get("ssm_chunk", 256),
+            bwd_impl=impls.get("ssm_bwd", "fused"))
         return x + out, new_cache, aux
     if kind.family == "hybrid":
         out, new_cache = hybrid.apply_hybrid(
             params["mix"], h, cfg, positions=positions,
             is_global=kind.is_global, cache=cache,
             impl=impls.get("attn", "auto"), ssm_impl=impls.get("ssm", "jnp"),
+            ssm_bwd=impls.get("ssm_bwd", "fused"),
             seq_shard=impls.get("attn_seq_shard", False))
         x = x + out
     else:

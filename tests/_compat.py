@@ -1,11 +1,12 @@
 """Hypothesis import-or-shim.
 
 The container image does not ship ``hypothesis``; the property tests only
-use ``@settings`` / ``@given`` with ``st.integers`` / ``st.sampled_from``.
-When the real package is available it is used unchanged; otherwise a
-deterministic mini-runner samples each strategy ``max_examples`` times
-from a fixed-seed PRNG, which keeps the property tests executable (and
-reproducible) instead of erroring at collection.
+use ``@settings`` / ``@given`` with ``st.integers`` / ``st.sampled_from``
+/ ``st.booleans`` / ``st.lists``. When the real package is available it
+is used unchanged; otherwise a deterministic mini-runner samples each
+strategy ``max_examples`` times from a fixed-seed PRNG, which keeps the
+property tests executable (and reproducible) instead of erroring at
+collection.
 """
 from __future__ import annotations
 
@@ -31,9 +32,16 @@ except ModuleNotFoundError:
     def _booleans():
         return _Strategy(lambda rng: bool(rng.getrandbits(1)))
 
+    def _lists(elem, min_size=0, max_size=8):
+        def sample(rng):
+            return [elem.sample(rng)
+                    for _ in range(rng.randint(min_size, max_size))]
+        return _Strategy(sample)
+
     st = types.SimpleNamespace(integers=_integers,
                                sampled_from=_sampled_from,
-                               booleans=_booleans)
+                               booleans=_booleans,
+                               lists=_lists)
 
     def _given(**strategies):
         def deco(f):

@@ -1,11 +1,13 @@
 """Training-grade kernel validation: Pallas backward passes against
 jax.vjp through the pure-jnp references, in interpret mode on CPU.
 
-Covers the three fused-backward kernel families (flash attention,
-quant8 straight-through, fused softmax-xent) across causal / windowed /
-GQA / MQA and odd (non-block-multiple) shapes, plus the memory-analysis
-acceptance check: no [Sq, Sk]-shaped intermediate anywhere in the
-train-direction jaxpr at Sq = Sk = 4096."""
+Covers the four fused-backward kernel families (flash attention, quant8
+straight-through, fused softmax-xent, the checkpointed selective-scan
+adjoint) across causal / windowed / GQA / MQA and odd
+(non-block-multiple) shapes plus nontrivial (chunk, block_d) scan
+tilings, and the memory-analysis acceptance checks: no [Sq, Sk]-, [T, V]-
+or [B, S, di, ds]-shaped intermediate anywhere in the train-direction
+jaxprs at production-like sequence lengths."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -14,9 +16,10 @@ import pytest
 from repro.core import compression, losses
 from repro.kernels import ops
 from repro.kernels.ref import (flash_attention_ref, quant_dequant_ref,
-                               softmax_xent_ref)
+                               selective_scan_ref, softmax_xent_ref)
 
 ATOL = 2e-4
+SS_ATOL = 1e-4   # fused scan adjoint vs reference VJP, fp32
 
 
 def _qkv(key, b, sq, sk, h, kh, hd, dtype=jnp.float32):
@@ -37,12 +40,18 @@ def _qkv(key, b, sq, sk, h, kh, hd, dtype=jnp.float32):
     "b,sq,sk,h,kh,hd,bq,bk,causal,window",
     [
         (1, 128, 128, 4, 4, 32, 64, 64, True, 0),    # MHA causal
-        (2, 128, 256, 8, 2, 64, 64, 128, True, 0),   # GQA rectangular
-        (1, 128, 128, 4, 2, 32, 64, 64, False, 0),   # full attention
-        (2, 64, 64, 2, 1, 128, 64, 64, True, 32),    # MQA sliding window
-        (1, 96, 96, 4, 2, 32, 64, 64, True, 0),      # Sq % block != 0
-        (1, 70, 130, 6, 3, 16, 64, 64, True, 33),    # odd both axes + window
-        (1, 200, 456, 4, 4, 32, 128, 128, False, 0), # odd, non-causal
+        pytest.param(2, 128, 256, 8, 2, 64, 64, 128, True, 0,
+                     marks=pytest.mark.slow),   # GQA rectangular
+        pytest.param(1, 128, 128, 4, 2, 32, 64, 64, False, 0,
+                     marks=pytest.mark.slow),   # full attention
+        pytest.param(2, 64, 64, 2, 1, 128, 64, 64, True, 32,
+                     marks=pytest.mark.slow),   # MQA sliding window
+        pytest.param(1, 96, 96, 4, 2, 32, 64, 64, True, 0,
+                     marks=pytest.mark.slow),   # Sq % block != 0
+        pytest.param(1, 70, 130, 6, 3, 16, 64, 64, True, 33,
+                     marks=pytest.mark.slow),   # odd both axes + window
+        pytest.param(1, 200, 456, 4, 4, 32, 128, 128, False, 0,
+                     marks=pytest.mark.slow),   # odd, non-causal
     ])
 def test_flash_backward_matches_ref_vjp(b, sq, sk, h, kh, hd, bq, bk,
                                         causal, window):
@@ -67,6 +76,7 @@ def test_flash_backward_matches_ref_vjp(b, sq, sk, h, kh, hd, bq, bk,
                                    atol=ATOL, rtol=ATOL, err_msg=name)
 
 
+@pytest.mark.slow
 def test_flash_backward_kv_validity_mask_under_jit():
     """Decode/ragged layout: the k_valid mask is a TRACED array under jit;
     forward and backward must resolve the identical mask (regression for
@@ -102,6 +112,7 @@ def test_flash_backward_kv_validity_mask_under_jit():
                                    atol=ATOL, rtol=ATOL, err_msg=name)
 
 
+@pytest.mark.slow
 def test_flash_backward_bf16():
     key = jax.random.PRNGKey(11)
     q, k, v, qp, kp = _qkv(key, 2, 128, 128, 4, 2, 32, jnp.bfloat16)
@@ -160,6 +171,158 @@ def test_no_quadratic_intermediate_at_4k():
 
 
 # ---------------------------------------------------------------------------
+# selective scan fused backward
+
+
+def _scan_inputs(key, b, s, di, ds, dtype=jnp.float32):
+    x = (jax.random.normal(key, (b, s, di)) * 0.5).astype(dtype)
+    dt = (jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 1),
+                                            (b, s, di))) * 0.1).astype(dtype)
+    bi = jax.random.normal(jax.random.fold_in(key, 2), (b, s, ds)).astype(dtype)
+    ci = jax.random.normal(jax.random.fold_in(key, 3), (b, s, ds)).astype(dtype)
+    al = jnp.log(jnp.abs(jax.random.normal(jax.random.fold_in(key, 4),
+                                           (di, ds))) + 0.5)
+    h0 = jax.random.normal(jax.random.fold_in(key, 5), (b, di, ds)) * 0.3
+    return x, dt, bi, ci, al, h0
+
+
+@pytest.mark.parametrize("b,s,di,ds,chunk,bd,with_h0", [
+    (1, 32, 16, 4, 8, 16, False),     # multi-chunk, single d-block
+    pytest.param(2, 64, 32, 8, 16, 8, True,
+                 marks=pytest.mark.slow),  # multi-chunk x multi-d-block
+    pytest.param(1, 48, 24, 4, 48, 8, True,
+                 marks=pytest.mark.slow),  # single chunk, d-blocked
+    pytest.param(2, 64, 32, 8, 64, 32, False,
+                 marks=pytest.mark.slow),  # degenerate tiling (nc = nd = 1)
+])
+def test_selective_scan_fused_backward_matches_ref_vjp(b, s, di, ds, chunk,
+                                                       bd, with_h0):
+    key = jax.random.PRNGKey(17)
+    x, dt, bi, ci, al, h0 = _scan_inputs(key, b, s, di, ds)
+    h0 = h0 if with_h0 else None
+
+    def f_ker(x, dt, bi, ci, al):
+        return ops.selective_scan(x, dt, bi, ci, al, h0, chunk, bd)
+
+    def f_ref(x, dt, bi, ci, al):
+        return selective_scan_ref(x, dt, bi, ci, al, h0)
+
+    out_k, vjp_k = jax.vjp(f_ker, x, dt, bi, ci, al)
+    out_r, vjp_r = jax.vjp(f_ref, x, dt, bi, ci, al)
+    for name, a, r in zip(["y", "h_final"], out_k, out_r):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(r),
+                                   atol=SS_ATOL, rtol=SS_ATOL, err_msg=name)
+    gy = jax.random.normal(jax.random.fold_in(key, 6), out_k[0].shape)
+    gh = jax.random.normal(jax.random.fold_in(key, 7), out_k[1].shape)
+    for name, a, r in zip("dx ddt dB dC dA_log".split(),
+                          vjp_k((gy, gh)), vjp_r((gy, gh))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(r),
+                                   atol=SS_ATOL, rtol=SS_ATOL, err_msg=name)
+
+
+@pytest.mark.slow
+def test_selective_scan_fused_backward_dh0():
+    """The h0 cotangent (the carry after chunk 0's adjoint sweep) matches
+    the reference VJP — this is the cut-layer gradient of a resumed scan."""
+    key = jax.random.PRNGKey(19)
+    b, s, di, ds = 2, 48, 16, 4
+    x, dt, bi, ci, al, h0 = _scan_inputs(key, b, s, di, ds)
+
+    def f_ker(h0):
+        return ops.selective_scan(x, dt, bi, ci, al, h0, 16, 8)
+
+    def f_ref(h0):
+        return selective_scan_ref(x, dt, bi, ci, al, h0)
+
+    gy = jax.random.normal(jax.random.fold_in(key, 6), (b, s, di))
+    gh = jax.random.normal(jax.random.fold_in(key, 7), (b, di, ds))
+    dk = jax.vjp(f_ker, h0)[1]((gy, gh))[0]
+    dr = jax.vjp(f_ref, h0)[1]((gy, gh))[0]
+    np.testing.assert_allclose(np.asarray(dk), np.asarray(dr),
+                               atol=SS_ATOL, rtol=SS_ATOL)
+
+
+@pytest.mark.slow
+def test_selective_scan_fused_backward_bf16():
+    key = jax.random.PRNGKey(23)
+    b, s, di, ds = 2, 32, 16, 4
+    x, dt, bi, ci, al, h0 = _scan_inputs(key, b, s, di, ds, jnp.bfloat16)
+
+    def f_ker(x, dt, bi, ci):
+        return ops.selective_scan(x, dt, bi, ci, al, None, 8, 8)[0]
+
+    def f_ref(x, dt, bi, ci):
+        return selective_scan_ref(x, dt, bi, ci, al)[0]
+
+    g = jax.random.normal(key, (b, s, di)).astype(jnp.bfloat16)
+    _, vjp_k = jax.vjp(f_ker, x, dt, bi, ci)
+    _, vjp_r = jax.vjp(f_ref, x, dt, bi, ci)
+    for name, a, r in zip("dx ddt dB dC".split(), vjp_k(g), vjp_r(g)):
+        assert a.dtype == jnp.bfloat16, name
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(r, np.float32),
+                                   atol=7e-2, rtol=7e-2, err_msg=name)
+
+
+@pytest.mark.slow
+def test_selective_scan_fused_backward_under_jit_grad():
+    """The full custom_vjp path composes with jit + grad (the training
+    loop's usage through apply_mamba)."""
+    key = jax.random.PRNGKey(29)
+    b, s, di, ds = 1, 32, 16, 4
+    x, dt, bi, ci, al, _ = _scan_inputs(key, b, s, di, ds)
+
+    @jax.jit
+    def g_ker(x):
+        return jax.grad(lambda x: ops.selective_scan(
+            x, dt, bi, ci, al, None, 8)[0].sum())(x)
+
+    g_ref = jax.grad(lambda x: selective_scan_ref(
+        x, dt, bi, ci, al)[0].sum())(x)
+    np.testing.assert_allclose(np.asarray(g_ker(x)), np.asarray(g_ref),
+                               atol=SS_ATOL, rtol=SS_ATOL)
+
+
+def _has_state_history(shapes, s, di, ds):
+    """True when some aval holds distinct axes >= (s, di, ds) — i.e. a
+    [B, S, di, ds]-sized state history."""
+    thresholds = sorted((s, di, ds), reverse=True)
+    for sh in shapes:
+        if len(sh) < 3:
+            continue
+        dims = sorted(sh, reverse=True)[:3]
+        if all(d >= t for d, t in zip(dims, thresholds)):
+            return True
+    return False
+
+
+def test_no_state_history_intermediate_at_long_seq():
+    """Acceptance: the fwd+bwd jaxpr of the fused scan holds nothing
+    [B, S, di, ds]-sized at S = 2048 (the checkpointed-recompute backward
+    caps live state at [chunk, block_d, ds] + the [B, nc, di, ds]
+    boundary checkpoints); the legacy recompute-through-reference VJP
+    DOES materialize the full state history (positive control)."""
+    b, s, di, ds = 1, 2048, 256, 16
+    x = jax.ShapeDtypeStruct((b, s, di), jnp.float32)
+    bc = jax.ShapeDtypeStruct((b, s, ds), jnp.float32)
+    al = jax.ShapeDtypeStruct((di, ds), jnp.float32)
+
+    def make(bwd):
+        def loss(x, dt, bi, ci, al):
+            y, h = ops.selective_scan(x, dt, bi, ci, al, None, 256, 256, bwd)
+            return y.sum() + h.sum()
+        return jax.make_jaxpr(
+            lambda x, dt, bi, ci, al: jax.grad(loss, argnums=(0, 1, 2, 3, 4))(
+                x, dt, bi, ci, al))(x, x, bc, bc, al)
+
+    fused_shapes = _collect_avals(make("fused").jaxpr, [])
+    assert not _has_state_history(fused_shapes, s, di, ds), [
+        sh for sh in fused_shapes if _has_state_history([sh], s, di, ds)]
+    recompute_shapes = _collect_avals(make("recompute").jaxpr, [])
+    assert _has_state_history(recompute_shapes, s, di, ds)
+
+
+# ---------------------------------------------------------------------------
 # quant8 straight-through cotangent
 
 
@@ -204,9 +367,11 @@ def test_quant_kernel_matches_jnp_oracle():
 
 @pytest.mark.parametrize("t,d,v,bt,bv", [
     (64, 32, 128, 32, 64),       # aligned
-    (100, 48, 300, 32, 64),      # odd T and V
+    pytest.param(100, 48, 300, 32, 64,
+                 marks=pytest.mark.slow),  # odd T and V
     (7, 16, 50, 32, 64),         # T < block_t, V < block_v
-    (128, 64, 1000, 64, 256),    # multi-tile vocab
+    pytest.param(128, 64, 1000, 64, 256,
+                 marks=pytest.mark.slow),  # multi-tile vocab
 ])
 def test_fused_ce_matches_ref_vjp(t, d, v, bt, bv):
     key = jax.random.PRNGKey(21)
@@ -230,6 +395,7 @@ def test_fused_ce_matches_ref_vjp(t, d, v, bt, bv):
                                    atol=ATOL, rtol=ATOL, err_msg=name)
 
 
+@pytest.mark.slow
 def test_chunked_ce_pallas_impl_matches_jnp_impl():
     """The run.impls-selected kernel path == the checkpointed jnp oracle,
     value and gradient, with a validity mask."""

@@ -14,6 +14,9 @@ from repro.kernels.ref import (flash_attention_ref, quant_dequant_ref,
 from repro.kernels.selective_scan import selective_scan_fwd
 
 TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+# The fused forward accumulates h in fp32 VMEM scratch, so fp32 outputs
+# track the jnp oracle tighter than the generic kernel tolerance.
+SS_TOL = {jnp.float32: 1e-5, jnp.bfloat16: 2e-2}
 
 
 # ---------------------------------------------------------------------------
@@ -25,9 +28,12 @@ TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
     "b,sq,sk,h,kh,hd,bq,bk",
     [
         (1, 128, 128, 4, 4, 32, 64, 64),      # MHA square
-        (2, 128, 256, 8, 2, 64, 64, 128),     # GQA, rectangular
-        (1, 256, 128, 6, 3, 16, 128, 64),     # odd head count
-        (2, 64, 64, 2, 1, 128, 64, 64),       # MQA, wide head
+        pytest.param(2, 128, 256, 8, 2, 64, 64, 128,
+                     marks=pytest.mark.slow),  # GQA, rectangular
+        pytest.param(1, 256, 128, 6, 3, 16, 128, 64,
+                     marks=pytest.mark.slow),  # odd head count
+        pytest.param(2, 64, 64, 2, 1, 128, 64, 64,
+                     marks=pytest.mark.slow),  # MQA, wide head
     ])
 def test_flash_vs_ref_shapes(b, sq, sk, h, kh, hd, bq, bk, dtype):
     key = jax.random.PRNGKey(0)
@@ -61,7 +67,8 @@ def test_flash_masks(causal, window):
 @pytest.mark.parametrize("sq,sk,bq,bk", [
     (96, 96, 64, 64),        # seq not a block multiple
     (70, 130, 64, 64),       # both axes odd
-    (3840, 0, 512, 512),     # VLM text region (4096 - 256), sk = sq
+    pytest.param(3840, 0, 512, 512,
+                 marks=pytest.mark.slow),  # VLM text region, sk = sq
 ])
 def test_flash_non_multiple_seq_lengths(sq, sk, bq, bk):
     """Non-block-multiple sequence lengths run via grid padding + k_valid
@@ -124,8 +131,8 @@ def test_flash_kv_validity_mask():
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("b,s,di,ds,chunk,bd", [
     (1, 32, 16, 4, 8, 16),
-    (2, 64, 32, 8, 16, 16),
-    (1, 128, 64, 16, 32, 32),
+    pytest.param(2, 64, 32, 8, 16, 16, marks=pytest.mark.slow),
+    pytest.param(1, 128, 64, 16, 32, 32, marks=pytest.mark.slow),
 ])
 def test_selective_scan_vs_ref(b, s, di, ds, chunk, bd, dtype):
     key = jax.random.PRNGKey(0)
@@ -141,9 +148,9 @@ def test_selective_scan_vs_ref(b, s, di, ds, chunk, bd, dtype):
     yr, hr = selective_scan_ref(x, dt, bi, ci, al)
     np.testing.assert_allclose(np.asarray(y, np.float32),
                                np.asarray(yr, np.float32),
-                               atol=TOL[dtype], rtol=TOL[dtype])
+                               atol=SS_TOL[dtype], rtol=SS_TOL[dtype])
     np.testing.assert_allclose(np.asarray(h), np.asarray(hr),
-                               atol=TOL[dtype], rtol=TOL[dtype])
+                               atol=SS_TOL[dtype], rtol=SS_TOL[dtype])
 
 
 def test_selective_scan_h0_and_grad():
@@ -159,21 +166,21 @@ def test_selective_scan_h0_and_grad():
     h0 = jax.random.normal(jax.random.fold_in(key, 5), (b, di, ds)) * 0.3
     y, h = ops.selective_scan(x, dt, bi, ci, al, h0, 8)
     yr, hr = selective_scan_ref(x, dt, bi, ci, al, h0)
-    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=2e-5)
-    np.testing.assert_allclose(np.asarray(h), np.asarray(hr), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr), atol=1e-5)
 
     g = jax.grad(lambda x: ops.selective_scan(x, dt, bi, ci, al,
                                               None, 8)[0].sum())(x)
     gr = jax.grad(lambda x: selective_scan_ref(x, dt, bi, ci,
                                                al)[0].sum())(x)
-    np.testing.assert_allclose(np.asarray(g), np.asarray(gr), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gr), atol=1e-5)
 
 
 # ---------------------------------------------------------------------------
 # quant8
 
 
-@hypothesis.settings(max_examples=10, deadline=None)
+@hypothesis.settings(max_examples=4, deadline=None)
 @hypothesis.given(
     rows=st.integers(1, 300),
     d=st.sampled_from([32, 128, 384]),

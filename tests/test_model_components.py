@@ -19,7 +19,8 @@ def _attn_cfg(**kw):
     return dataclasses.replace(base, **kw)
 
 
-@pytest.mark.parametrize("window", [0, 16])
+@pytest.mark.parametrize(
+    "window", [0, pytest.param(16, marks=pytest.mark.slow)])
 def test_blockwise_equals_naive(window):
     cfg = _attn_cfg()
     key = jax.random.PRNGKey(0)
@@ -75,6 +76,7 @@ def test_mrope_sections_sum():
     np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), atol=1e-6)
 
 
+@pytest.mark.slow
 @hypothesis.settings(max_examples=6, deadline=None)
 @hypothesis.given(seed=st.integers(0, 100),
                   top_k=st.sampled_from([1, 2, 4]))
@@ -109,6 +111,7 @@ def test_moe_router_aux_penalizes_imbalance():
     assert float(aux_col) > float(aux_bal)
 
 
+@pytest.mark.slow
 @hypothesis.settings(max_examples=6, deadline=None)
 @hypothesis.given(chunk=st.sampled_from([4, 16, 64]),
                   s=st.sampled_from([12, 32, 60]))

@@ -44,6 +44,7 @@ def _batch(cfg, n, bn, s, seed, mask=None):
     }
 
 
+@pytest.mark.slow
 @hypothesis.settings(max_examples=6, deadline=None)
 @hypothesis.given(
     n=st.sampled_from([2, 3, 4]),
@@ -65,6 +66,7 @@ def test_aggregated_equals_per_client(n, seed, drop):
         assert float(jnp.max(jnp.abs(a - b))) / scale < 1e-4
 
 
+@pytest.mark.slow
 def test_client_isolation():
     """Perturbing client 1's data must not change client 0's head grad."""
     n = 3
@@ -85,6 +87,7 @@ def test_client_isolation():
     np.testing.assert_array_equal(np.asarray(a1[2]), np.asarray(a2[2]))
 
 
+@pytest.mark.slow
 def test_dropped_client_gets_zero_grad():
     n = 3
     cfg, params, frozen, loss_fn = _setup(n)
@@ -96,6 +99,7 @@ def test_dropped_client_gets_zero_grad():
     assert float(jnp.max(jnp.abs(a[0]))) > 0.0
 
 
+@pytest.mark.slow
 def test_weight_renormalization_on_dropout():
     """With uniform data, dropping a client renormalizes w_n = 1/(N-1):
     the loss is the mean over participants, not scaled down."""
@@ -112,6 +116,7 @@ def test_weight_renormalization_on_dropout():
     assert abs(float(l_full) - float(l_drop)) < 1e-5
 
 
+@pytest.mark.slow
 @hypothesis.settings(max_examples=4, deadline=None)
 @hypothesis.given(mu=st.sampled_from([1, 2, 4]))
 def test_microbatching_preserves_gradients(mu):

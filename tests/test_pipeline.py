@@ -106,6 +106,7 @@ def _tiny_train(donate, n=2, bn=2, seq=24):
     return state, step_fn, batch
 
 
+@pytest.mark.slow
 def test_donated_step_aliases_state_buffers():
     """The lowered step aliases (at least) params + both Adam moments in
     place — no 2x param+opt peak allocation."""
@@ -130,12 +131,14 @@ def test_donated_handle_raises_on_reuse():
     step_fn(new_state, batch)
 
 
+@pytest.mark.slow
 def test_undonated_step_allows_reuse():
     state, step_fn, batch = _tiny_train(donate=False)
     step_fn(state, batch)
     step_fn(state, batch)
 
 
+@pytest.mark.slow
 def test_donated_matches_undonated():
     state_a, step_a, batch = _tiny_train(donate=True)
     state_b, step_b, _ = _tiny_train(donate=False)
@@ -159,6 +162,7 @@ def test_metrics_ring_keeps_latest():
     assert float(got["loss"]) == 7.0
 
 
+@pytest.mark.slow
 def test_trainer_overlapped_end_to_end():
     """Full pipeline: prefetch + donation + sync-free metrics, and the
     result reflects the LAST step, not the last logged step."""

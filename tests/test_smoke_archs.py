@@ -1,7 +1,11 @@
 """Per-architecture smoke tests (deliverable f): a REDUCED same-family
 config runs one forward and one MPSL train step on CPU with finite
 outputs and the right shapes. Full configs are exercised only via the
-dry-run."""
+dry-run.
+
+Tiering: tier-1 keeps one representative arch per code path (dense /
+ssm / encoder-decoder); the full per-arch sweep and the decode-vs-full
+comparisons are `slow` (several seconds of jit each)."""
 import dataclasses
 
 import jax
@@ -15,6 +19,12 @@ from repro.models import layers, model as M
 from repro.optim import schedules
 
 ARCHS = list_archs()
+
+
+def _tiered(archs, fast):
+    """Parametrize: archs in ``fast`` run in tier-1, the rest are slow."""
+    return [a if a in fast else pytest.param(a, marks=pytest.mark.slow)
+            for a in archs]
 
 
 def _batch_for(cfg, key, n, bn, s):
@@ -33,7 +43,9 @@ def _batch_for(cfg, key, n, bn, s):
     return batch
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize(
+    "arch", _tiered(ARCHS, {"minitron-4b", "falcon-mamba-7b",
+                            "whisper-tiny"}))
 def test_forward_shapes_and_finite(arch):
     cfg = reduced(get_config(arch))
     key = jax.random.PRNGKey(0)
@@ -56,7 +68,7 @@ def test_forward_shapes_and_finite(arch):
     assert bool(jnp.isfinite(aux))
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", _tiered(ARCHS, {"minitron-4b"}))
 def test_mpsl_train_step(arch):
     cfg = reduced(get_config(arch))
     mp = MPSLConfig(n_clients=2, trainable_blocks=1, head_adapter_rank=4)
@@ -78,6 +90,7 @@ def test_mpsl_train_step(arch):
     assert float(metrics["loss"]) < l0, "loss should decrease on 3 steps"
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["minitron-4b", "falcon-mamba-7b",
                                   "hymba-1.5b", "qwen3-moe-235b-a22b",
                                   "whisper-tiny", "qwen2-vl-72b"])

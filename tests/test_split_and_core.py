@@ -22,9 +22,11 @@ def test_split_segments_boundaries():
     assert sum(s.count for s in t) == 2
 
 
-@pytest.mark.parametrize("arch,tb", [("minitron-4b", 1),
-                                     ("qwen2-moe-a2.7b", 2),
-                                     ("whisper-tiny", 1)])
+@pytest.mark.parametrize("arch,tb", [
+    ("minitron-4b", 1),
+    pytest.param("qwen2-moe-a2.7b", 2, marks=pytest.mark.slow),
+    pytest.param("whisper-tiny", 1, marks=pytest.mark.slow),
+])
 def test_assemble_full_params_matches_split_forward(arch, tb):
     """[F_C ; F_S] reassembly (paper Sec. 3.3): running the assembled full
     model gives the same forward as running the split trees (frozen prefix
@@ -103,6 +105,7 @@ def test_fusion_stacked_layout():
 # Losses
 
 
+@pytest.mark.slow
 @hypothesis.settings(max_examples=8, deadline=None)
 @hypothesis.given(t=st.integers(3, 200), chunk=st.sampled_from([16, 64, 512]),
                   seed=st.integers(0, 100))

@@ -28,6 +28,7 @@ def _mm_batch(ds, shards, bn, step, n):
             "mask": jnp.asarray(b["mask"])}
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("fusion_mode", ["early", "late"])
 def test_multimodal_mpsl_learns(fusion_mode):
     """MPSL on synthetic (vision, text) classification learns past chance
@@ -59,6 +60,7 @@ def test_multimodal_mpsl_learns(fusion_mode):
     assert losses[-1] < losses[0] * 0.9
 
 
+@pytest.mark.slow
 def test_post_training_construction_and_eval():
     """FedAvg the client tokenizers, assemble [F_C_agg ; F_S], run it as a
     plain centralized model (paper Sec. 3.3 evaluation protocol)."""
@@ -92,6 +94,7 @@ def test_post_training_construction_and_eval():
     assert bool(jnp.isfinite(logits).all())
 
 
+@pytest.mark.slow
 def test_compression_modes_still_learn():
     cfg = _vit()
     n, bn, n_classes = 2, 4, 4
@@ -117,6 +120,7 @@ def test_compression_modes_still_learn():
     assert losses[-1] < losses[0]
 
 
+@pytest.mark.slow
 def test_fedavg_baseline_round():
     """One FedAvg round on the full model runs and averages."""
     cfg = _vit()

@@ -32,6 +32,7 @@ def _setup(tmp_path=None, drop_prob=0.0, n=4, steps=6):
     return cfg, state, step_fn, loader, tc
 
 
+@pytest.mark.slow
 def test_restart_is_bitwise_identical(tmp_path):
     """Run 6 steps straight vs 3 steps + crash + resume: identical states."""
     _, state, step_fn, loader, tc = _setup(tmp_path / "a", steps=6)
@@ -58,6 +59,7 @@ def test_restart_is_bitwise_identical(tmp_path):
                                    atol=0, rtol=0)
 
 
+@pytest.mark.slow
 def test_restart_with_prefetch_is_bitwise_identical(tmp_path):
     """The fault-tolerance invariant survives the overlapped pipeline: a
     straight un-prefetched run vs a prefetched + donated crash+resume run
@@ -99,6 +101,7 @@ def test_restart_with_prefetch_is_bitwise_identical(tmp_path):
                                    atol=0, rtol=0)
 
 
+@pytest.mark.slow
 def test_straggler_masking_trains(tmp_path):
     _, state, step_fn, loader, tc = _setup(None, drop_prob=0.4, steps=8)
     t = Trainer(step_fn, state, loader, tc, log_fn=lambda s: None)
@@ -108,6 +111,7 @@ def test_straggler_masking_trains(tmp_path):
     assert hist[-1] < hist[0]
 
 
+@pytest.mark.slow
 def test_elastic_rejoin():
     _, state, step_fn, loader, tc = _setup(None, steps=2)
     t = Trainer(step_fn, state, loader, tc, log_fn=lambda s: None)
