@@ -1,0 +1,97 @@
+"""Steps/sec regression gate for the end-to-end pipeline benchmark.
+
+Diffs a freshly measured BENCH_pipeline.json against the committed
+baseline, per (cell, variant), and fails when any entry's steps/sec
+drops below ``min_ratio`` of the baseline:
+
+  PYTHONPATH=src python -m benchmarks.pipeline_bench --steps 8 \
+      --out /tmp/bench_new.json
+  PYTHONPATH=src python -m benchmarks.regression_check \
+      --bench /tmp/bench_new.json [--baseline BENCH_pipeline.json] \
+      [--min-ratio 0.5]
+
+Absolute steps/sec moves with the machine (the committed baseline comes
+from a 1-core container), so CI runs this with a loose ratio — the gate
+is for order-of-magnitude pipeline regressions (a reintroduced per-step
+sync, a serialized prefetcher), not single-digit-percent noise. Use
+``--update`` to rewrite the baseline from the new measurement.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import sys
+from typing import Dict, List, Tuple
+
+
+def _index(doc: dict) -> Dict[Tuple[str, str], dict]:
+    return {(e.get("cell", "?"), e.get("variant", "?")): e
+            for e in doc.get("entries", [])}
+
+
+def check(new: dict, baseline: dict, min_ratio: float = 0.5
+          ) -> List[dict]:
+    """Compare steps/sec per (cell, variant). Returns one row per entry
+    with pass/fail status; missing counterparts are reported but never
+    fail the gate (cells may be added or retired)."""
+    n_idx, b_idx = _index(new), _index(baseline)
+    rows = []
+    for key in sorted(set(n_idx) | set(b_idx)):
+        cell, variant = key
+        n, b = n_idx.get(key), b_idx.get(key)
+        if n is None or b is None:
+            rows.append({"cell": cell, "variant": variant,
+                         "status": "missing-in-new" if n is None
+                         else "missing-in-baseline"})
+            continue
+        new_sps = float(n["steps_per_sec"])
+        base_sps = float(b["steps_per_sec"])
+        ratio = new_sps / base_sps if base_sps > 0 else float("inf")
+        rows.append({"cell": cell, "variant": variant,
+                     "baseline_sps": base_sps, "new_sps": new_sps,
+                     "ratio": round(ratio, 3),
+                     "status": "ok" if ratio >= min_ratio else "FAIL"})
+    return rows
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        description="Gate BENCH_pipeline.json steps/sec vs a baseline.")
+    p.add_argument("--bench", required=True,
+                   help="freshly measured BENCH_pipeline.json")
+    p.add_argument("--baseline", default="BENCH_pipeline.json",
+                   help="committed baseline to diff against")
+    p.add_argument("--min-ratio", type=float, default=0.5,
+                   help="fail when new steps/sec < ratio * baseline")
+    p.add_argument("--update", action="store_true",
+                   help="copy --bench over --baseline instead of gating")
+    args = p.parse_args(argv)
+
+    with open(args.bench) as f:
+        new = json.load(f)
+    if args.update:
+        shutil.copyfile(args.bench, args.baseline)
+        print(f"[regression] baseline updated <- {args.bench}")
+        return 0
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    rows = check(new, baseline, min_ratio=args.min_ratio)
+    failures = 0
+    for r in rows:
+        if "ratio" in r:
+            print(f"[regression] {r['cell']:45s} {r['variant']:9s} "
+                  f"{r['baseline_sps']:8.2f} -> {r['new_sps']:8.2f} sps "
+                  f"(x{r['ratio']:.2f}) {r['status']}")
+        else:
+            print(f"[regression] {r['cell']:45s} {r['variant']:9s} "
+                  f"{r['status']}")
+        failures += r["status"] == "FAIL"
+    print(f"[regression] {len(rows) - failures}/{len(rows)} entries ok "
+          f"(min ratio {args.min_ratio})")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

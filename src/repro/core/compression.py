@@ -26,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops as kops
+from repro.obs import comm as obs_comm
 
 # scale payload: one f32 per token row (per-row symmetric quantization)
 SCALE_BYTES = 4
@@ -47,6 +48,9 @@ def _quant_dequant_jnp(x, key, bits: int = 8):
 
 
 def _quant_dequant(x, key, bits: int = 8, impl: str = "pallas"):
+    # trace-time accounting hook: marks the matching compressed link(s)
+    # as actually quantized in the executed program (vs merely configured)
+    obs_comm.note_quant(x.shape, bits=bits, impl=impl)
     if impl == "pallas":
         # kops.quant_dequant already carries the straight-through VJP, but
         # callers below wrap it in their own custom_vjp, which overrides.

@@ -32,6 +32,7 @@ import jax.numpy as jnp
 
 from repro.core import compression, fusion, losses, split
 from repro.models import layers, model as M, tokenizers as tok
+from repro.obs import comm as obs_comm
 from repro.optim import (adamw_init, adamw_update, apply_updates,
                          clip_by_global_norm)
 from repro.parallel import sharding
@@ -45,6 +46,28 @@ def _client_weights(mask, n):
     """w_n = |B_n| / |B| over participating clients (uniform B_n here)."""
     m = mask.astype(jnp.float32)
     return m / jnp.maximum(jnp.sum(m), 1.0)
+
+
+def _account_links(h, mpsl, suffix: str = ""):
+    """Trace-time per-link byte accounting of the client/server exchange.
+
+    ``h`` is the stacked [N, Bn, ...] smashed-data array at the cut
+    layer — its runtime shape/dtype IS the uplink payload, and (by the
+    symmetry of the cut) the cut-layer-gradient downlink moves the same
+    geometry. Runs while the step is traced; adds nothing to the jitted
+    program (telemetry neutrality, asserted in tests)."""
+    wire = (compression.compressed_bytes(h.shape[1:])
+            if mpsl.compress_uplink else None)
+    obs_comm.record_link("uplink.activations" + suffix, h.shape, h.dtype,
+                         direction="uplink",
+                         compressed=mpsl.compress_uplink,
+                         wire_bytes_per_client=wire)
+    wire = (compression.compressed_bytes(h.shape[1:])
+            if mpsl.compress_downlink else None)
+    obs_comm.record_link("downlink.gradients" + suffix, h.shape, h.dtype,
+                         direction="downlink",
+                         compressed=mpsl.compress_downlink,
+                         wire_bytes_per_client=wire)
 
 
 def _run_body(frozen, server, cfg, h, positions, impls, remat,
@@ -109,6 +132,7 @@ def make_lm_loss(cfg, run):
         h = sharding.shard_act(h, ("client", None, None, None))
 
         # ---- 2. uplink (smashed data) ----
+        _account_links(h, mpsl)
         if mpsl.compress_uplink:
             h = compression.compress_activations(h, r_up)
         if mpsl.compress_downlink:
@@ -217,7 +241,8 @@ def make_vit_loss(cfg, run, modalities=("vision", "text"),
 
         bn = next(iter(tokenized.values())).shape[1]
 
-        def uplink(a):
+        def uplink(a, link):
+            _account_links(a, mpsl, suffix="/" + link)
             if mpsl.compress_uplink:
                 a = compression.compress_activations(a, r_up)
             if mpsl.compress_downlink:
@@ -228,7 +253,8 @@ def make_vit_loss(cfg, run, modalities=("vision", "text"),
         if task == "retrieval":
             enc = {}
             for m in modalities:
-                e, a = encode(frozen, trainable["server"], uplink(tokenized[m]))
+                e, a = encode(frozen, trainable["server"],
+                              uplink(tokenized[m], m))
                 enc[m] = e
                 aux = aux + a
             ma, mb = sorted(modalities)
@@ -242,13 +268,14 @@ def make_vit_loss(cfg, run, modalities=("vision", "text"),
         else:
             if mpsl.fusion == "early":
                 joint = fusion.fuse_early(tokenized)             # [N,Bn,T,D]
-                h, aux = encode(frozen, trainable["server"], uplink(joint))
+                h, aux = encode(frozen, trainable["server"],
+                                uplink(joint, "joint"))
                 emb = fusion.gap(h)                              # [N*Bn, D]
             else:
                 enc = {}
                 for m in modalities:
                     e, a = encode(frozen, trainable["server"],
-                                  uplink(tokenized[m]))
+                                  uplink(tokenized[m], m))
                     enc[m] = e
                     aux = aux + a
                 emb = fusion.gap(fusion.fuse_late(enc))

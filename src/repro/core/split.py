@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import layers, model as M, tokenizers as tok
+from repro.obs import comm as obs_comm
 
 
 @dataclasses.dataclass(frozen=True)
@@ -153,6 +154,10 @@ def init_mpsl_lm(key, cfg, run):
         server["lm_head"] = base["embed"]["table"].T.copy()
 
     client = {"adapter": init_client_adapters(k1, cfg, mpsl)}
+    # one-time link: each client ships its head for the post-training
+    # FedAvg (paper Sec. 3.3) — accounted per client from the real tree
+    obs_comm.record_param_link("aggregation.client_head", client,
+                               direction="uplink", per_step=False)
     params = {"client": client, "server": server}
     return params, frozen, plan
 
@@ -186,6 +191,8 @@ def init_mpsl_vit(key, cfg, run, modalities=("vision", "text"),
         }
     client = {"tokenizers": init_client_tokenizers(ks[4], cfg, mpsl,
                                                    modalities)}
+    obs_comm.record_param_link("aggregation.client_head", client,
+                               direction="uplink", per_step=False)
     params = {"client": client, "server": server}
     return params, frozen, plan
 

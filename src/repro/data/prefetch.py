@@ -20,7 +20,10 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
 from typing import Callable, Optional
+
+from repro import obs
 
 
 class PrefetchLoader:
@@ -28,6 +31,14 @@ class PrefetchLoader:
 
     depth=0 degrades to a synchronous passthrough (placement still
     applied), which is what the determinism tests diff against.
+
+    Health telemetry: ``health()`` exposes queue depth, produced-batch
+    count, restart/reseed count, and cumulative producer wait time (time
+    the producer spent blocked on a full queue — a deep queue with zero
+    wait means the consumer is the bottleneck, not assembly). A producer
+    error is no longer silent until the next ``get``: it is recorded as
+    a terminal error event in the ambient obs run log the moment it
+    happens, in addition to re-raising on the consumer side.
     """
 
     def __init__(self, loader, depth: int = 2,
@@ -39,6 +50,10 @@ class PrefetchLoader:
         self._thread: Optional[threading.Thread] = None
         self._stop: Optional[threading.Event] = None
         self._next_consume: Optional[int] = None
+        self.restarts = 0               # producer reseeds (resume/ooo reads)
+        self.last_error: Optional[BaseException] = None
+        self._produced = 0
+        self._wait_s = 0.0              # producer time blocked on full queue
 
     # -- consumer side -------------------------------------------------------
 
@@ -55,6 +70,18 @@ class PrefetchLoader:
         self._next_consume = step + 1
         return payload
 
+    def health(self) -> dict:
+        """Prefetcher health gauges (all host-side, read without locks —
+        single-writer counters under the GIL)."""
+        q = self._q
+        return {
+            "queue_depth": q.qsize() if q is not None else 0,
+            "queue_capacity": self.depth,
+            "produced": self._produced,
+            "restarts": self.restarts,
+            "producer_wait_s": round(self._wait_s, 6),
+        }
+
     # -- producer side -------------------------------------------------------
 
     def _restart(self, step: int):
@@ -62,6 +89,7 @@ class PrefetchLoader:
         self._q = queue.Queue(maxsize=self.depth)
         self._stop = threading.Event()
         self._next_consume = step
+        self.restarts += 1
         self._thread = threading.Thread(
             target=self._produce, args=(step, self._q, self._stop),
             name="mpsl-prefetch", daemon=True)
@@ -70,16 +98,26 @@ class PrefetchLoader:
     def _produce(self, step: int, q: queue.Queue, stop: threading.Event):
         while not stop.is_set():
             try:
-                payload = self.place(self.inner.batch(step))
+                with obs.span("host/assemble", step=step):
+                    payload = self.inner.batch(step)
+                with obs.span("host/place", step=step):
+                    payload = self.place(payload)
             except BaseException as e:                 # surfaced to consumer
+                self.last_error = e
+                # terminal event NOW — not only on the consumer's next get
+                obs.event("prefetch/producer_error", level="error",
+                          step=step, error=repr(e))
                 q.put((step, None, e))
                 return
+            t_wait = time.perf_counter()
             while not stop.is_set():
                 try:
                     q.put((step, payload, None), timeout=0.05)
                     break
                 except queue.Full:
                     continue
+            self._wait_s += time.perf_counter() - t_wait
+            self._produced += 1
             step += 1
 
     def close(self):

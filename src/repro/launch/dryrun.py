@@ -25,6 +25,7 @@ from typing import Any, Dict, Optional
 import jax
 import numpy as np
 
+from repro import obs
 from repro.configs import SHAPES, cell_supported, get_config, list_archs
 from repro.launch import mesh as mesh_lib
 from repro.launch import steps
@@ -33,6 +34,8 @@ from repro.parallel import sharding
 COLLECTIVE_RE = re.compile(
     r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
     r"[^=]*=?\s*\(?([a-z0-9]+)\[([0-9,]*)\]")
+
+LOG = obs.get_logger("dryrun")
 
 DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
@@ -86,7 +89,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     if not ok:
         rec["status"] = why
         if verbose:
-            print(f"[dryrun] {arch} x {shape_name}: {why}")
+            LOG.info(f"{arch} x {shape_name}: {why}", arch=arch,
+                     shape=shape_name, status=why)
         return rec
 
     mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
@@ -127,11 +131,13 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     if verbose:
         mb = rec["memory"].get("temp_size_in_bytes", 0) / 1e9
         ab = rec["memory"].get("argument_size_in_bytes", 0) / 1e9
-        print(f"[dryrun] {arch} x {shape_name} ({rec['mesh']}): OK  "
-              f"flops/dev={rec['flops_per_device']:.3e}  "
-              f"temp={mb:.2f}GB args={ab:.2f}GB  "
-              f"coll={ {k: round(v/1e6,1) for k,v in coll.items()} }MB  "
-              f"compile={rec['compile_s']}s")
+        LOG.info(f"{arch} x {shape_name} ({rec['mesh']}): OK  "
+                 f"flops/dev={rec['flops_per_device']:.3e}  "
+                 f"temp={mb:.2f}GB args={ab:.2f}GB  "
+                 f"coll={ {k: round(v/1e6,1) for k,v in coll.items()} }MB  "
+                 f"compile={rec['compile_s']}s",
+                 arch=arch, shape=shape_name, mesh=rec["mesh"],
+                 compile_s=rec["compile_s"])
     return rec
 
 
@@ -163,16 +169,18 @@ def main(argv=None):
                 records.append(run_cell(arch, shape, multi_pod=mp))
             except Exception as e:  # noqa: BLE001 — report and continue
                 failures += 1
-                print(f"[dryrun] {arch} x {shape} "
-                      f"({'2x16x16' if mp else '16x16'}): FAIL {e!r}")
+                LOG.error(f"{arch} x {shape} "
+                          f"({'2x16x16' if mp else '16x16'}): FAIL {e!r}",
+                          arch=arch, shape=shape, error=repr(e))
                 records.append({"arch": arch, "shape": shape,
                                 "mesh": "2x16x16" if mp else "16x16",
                                 "status": f"FAIL: {e}"})
     if args.out:
         with open(args.out, "w") as f:
             json.dump(records, f, indent=1)
-        print(f"[dryrun] wrote {len(records)} records -> {args.out}")
-    print(f"[dryrun] {len(records) - failures}/{len(records)} cells ok")
+        LOG.info(f"wrote {len(records)} records -> {args.out}")
+    LOG.info(f"{len(records) - failures}/{len(records)} cells ok",
+             ok=len(records) - failures, total=len(records))
     return 1 if failures else 0
 
 

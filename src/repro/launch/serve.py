@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs import get_config, reduced
 from repro.models import layers, model as M
 
@@ -51,7 +52,17 @@ def main(argv=None):
     p.add_argument("--prompt-len", type=int, default=32)
     p.add_argument("--decode-steps", type=int, default=16)
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--obs-log", default=None,
+                   help="write a JSONL telemetry run log to this path")
     args = p.parse_args(argv)
+
+    log = obs.get_logger("serve")
+    if args.obs_log:
+        obs.configure(args.obs_log,
+                      meta={"driver": "serve", "arch": args.arch,
+                            "batch": args.batch,
+                            "prompt_len": args.prompt_len,
+                            "decode_steps": args.decode_steps})
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -79,11 +90,16 @@ def main(argv=None):
     t_decode = time.time() - t0
 
     gen = np.stack(out, axis=1)
-    print(f"[serve] batch={args.batch} prefill({args.prompt_len} tok)="
-          f"{t_prefill*1e3:.1f}ms decode={args.decode_steps} steps in "
-          f"{t_decode*1e3:.1f}ms "
-          f"({t_decode/args.decode_steps*1e3:.1f} ms/tok)")
-    print(f"[serve] sample generations (token ids): {gen[:2].tolist()}")
+    log.info(f"batch={args.batch} prefill({args.prompt_len} tok)="
+             f"{t_prefill*1e3:.1f}ms decode={args.decode_steps} steps in "
+             f"{t_decode*1e3:.1f}ms "
+             f"({t_decode/args.decode_steps*1e3:.1f} ms/tok)",
+             prefill_ms=round(t_prefill * 1e3, 2),
+             decode_ms=round(t_decode * 1e3, 2),
+             ms_per_tok=round(t_decode / args.decode_steps * 1e3, 2))
+    log.info(f"sample generations (token ids): {gen[:2].tolist()}")
+    if args.obs_log:
+        obs.shutdown()
     return 0
 
 

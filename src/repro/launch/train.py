@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs import (MPSLConfig, RunConfig, SHAPES, get_config, reduced)
 from repro.core import mpsl, split
 from repro.data import (ClientLoader, PrefetchLoader, SyntheticLM,
@@ -65,7 +66,22 @@ def main(argv=None):
                    help="prefetch depth (0 = synchronous loader)")
     p.add_argument("--no-donate", dest="donate", action="store_false",
                    default=True, help="disable train-state buffer donation")
+    p.add_argument("--obs-log", default=None,
+                   help="write a JSONL telemetry run log to this path "
+                        "(render with `python -m repro.obs.report`)")
+    p.add_argument("--profile-dir", default=None,
+                   help="opt-in jax.profiler trace window directory")
     args = p.parse_args(argv)
+
+    log = obs.get_logger("train")
+    if args.obs_log:
+        obs.configure(args.obs_log,
+                      meta={"driver": "train", "arch": args.arch,
+                            "steps": args.steps,
+                            "n_clients": args.n_clients,
+                            "batch_per_client": args.batch_per_client,
+                            "seq": args.seq, "compress": args.compress,
+                            "prefetch": args.prefetch, "seed": args.seed})
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -93,12 +109,20 @@ def main(argv=None):
     trainer = Trainer(step_fn, state, loader,
                       TrainerConfig(total_steps=args.steps,
                                     ckpt_every=args.ckpt_every,
-                                    ckpt_dir=args.ckpt_dir))
+                                    ckpt_dir=args.ckpt_dir,
+                                    profile_dir=args.profile_dir))
     result = trainer.run()
     loader.close()
-    print(f"[train] done: final loss {result['final_loss']:.4f} "
-          f"({result['steps_per_sec']:.2f} steps/s, "
-          f"host stall {100 * result['host_stall_frac']:.0f}%)")
+    log.info(f"done: final loss {result['final_loss']:.4f} "
+             f"({result['steps_per_sec']:.2f} steps/s, "
+             f"host stall {100 * result['host_stall_frac']:.0f}%)",
+             final_loss=result["final_loss"],
+             steps_per_sec=round(result["steps_per_sec"], 4),
+             host_stall_frac=round(result["host_stall_frac"], 4))
+    if args.obs_log:
+        obs.shutdown()
+        log.info(f"run log -> {args.obs_log} "
+                 f"(python -m repro.obs.report {args.obs_log})")
     return 0
 
 

@@ -1,0 +1,163 @@
+"""Runtime per-client / per-link communication accounting.
+
+``core.costs`` *models* the MPSL links analytically; this module
+*measures* them from the arrays that actually cross the client/server
+boundary at runtime. The hooks live in ``core.mpsl`` (smashed-data
+uplink, cut-layer-gradient downlink), ``core.compression`` (the quant8
+wire format actually applied), and ``core.split`` (the one-time client
+head FedAvg link) — they fire while the step function is TRACED, so the
+recorded shapes and dtypes are the runtime values, but nothing is added
+to the jitted program: telemetry neutrality is asserted by
+``tests/test_pipeline.py`` (identical jaxpr with obs enabled).
+
+A link record:
+
+  name                   "uplink.activations", "downlink.gradients",
+                         per-modality variants ("uplink.activations/vision"),
+                         "aggregation.client_head"
+  direction              uplink | downlink
+  n_clients              leading stacked-client axis of the traced array
+  per_client_shape       the [Bn, ...] payload shape one client moves
+  dtype                  wire dtype before quantization
+  raw_bytes_per_client   uncompressed payload bytes per client per step
+  wire_bytes_per_client  bytes actually on the wire (== raw uncompressed;
+                         quant payload + per-row scales when compressed)
+  compressed / bits      quant8 link state
+  per_step               True for the per-step training links; False for
+                         one-time links (head FedAvg)
+  quantized_in_trace     set by core.compression when the quant kernel
+                         was actually traced into the step (cross-checks
+                         the config flag against the executed program)
+
+Records merge by name (repeat traces — microbatch scan, per-client
+lax.map, recompile — just overwrite with identical values) and are
+mirrored into the ambient recorder as ``link`` records when telemetry
+is enabled. ``tests/test_obs.py`` cross-checks these measurements
+against the ``core.costs`` analytic model within quant8 scale overhead.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.obs import recorder as _rec
+
+_lock = threading.Lock()
+_links: Dict[str, Dict[str, Any]] = {}
+
+
+def _store(name: str, fields: Dict[str, Any]):
+    with _lock:
+        entry = _links.setdefault(name, {"name": name})
+        entry.update(fields)
+        snap = dict(entry)
+    _rec.get().link(snap)
+
+
+def record_link(name: str, shape, dtype, *, direction: str,
+                compressed: bool = False, bits: int = 8,
+                wire_bytes_per_client: Optional[int] = None,
+                per_step: bool = True):
+    """Record a stacked-client link from a traced array's shape/dtype.
+
+    ``shape`` is the full ``[N, ...]`` array shape; the per-client
+    payload is ``shape[1:]``. ``wire_bytes_per_client`` defaults to the
+    raw bytes (uncompressed wire); compressed callers pass the actual
+    wire size (e.g. ``core.compression.compressed_bytes``).
+    """
+    shape = tuple(int(s) for s in shape)
+    per_client = shape[1:]
+    itemsize = np.dtype(dtype).itemsize
+    raw = int(np.prod(per_client, dtype=np.int64)) * itemsize
+    wire = raw if wire_bytes_per_client is None else int(
+        wire_bytes_per_client)
+    _store(name, {
+        "direction": direction,
+        "n_clients": shape[0],
+        "per_client_shape": list(per_client),
+        "dtype": str(np.dtype(dtype)),
+        "raw_bytes_per_client": raw,
+        "wire_bytes_per_client": wire,
+        "compressed": bool(compressed),
+        "bits": int(bits) if compressed else 8 * itemsize,
+        "per_step": bool(per_step),
+    })
+
+
+def record_param_link(name: str, tree, *, direction: str = "uplink",
+                      per_step: bool = False):
+    """Record a link that moves a stacked ``[N, ...]`` parameter tree
+    (e.g. the post-training client-head FedAvg sync)."""
+    import jax
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        return
+    n = int(leaves[0].shape[0])
+    raw = sum(int(np.prod(l.shape[1:], dtype=np.int64))
+              * np.dtype(l.dtype).itemsize for l in leaves)
+    _store(name, {
+        "direction": direction,
+        "n_clients": n,
+        "per_client_shape": None,
+        "dtype": "tree",
+        "raw_bytes_per_client": raw,
+        "wire_bytes_per_client": raw,
+        "compressed": False,
+        "bits": None,
+        "per_step": bool(per_step),
+        "n_leaves": len(leaves),
+    })
+
+
+def note_quant(shape, bits: int, impl: str):
+    """Called by ``core.compression`` when a quant-dequant actually
+    enters a trace: marks every compressed link whose per-client payload
+    matches the quantized array as executed (not just configured)."""
+    shape = tuple(int(s) for s in shape)
+    with _lock:
+        hits = [e for e in _links.values()
+                if e.get("compressed")
+                and tuple(e.get("per_client_shape") or ()) == shape[1:]]
+        for e in hits:
+            e["quantized_in_trace"] = True
+            e["quant_impl"] = impl
+            e["bits"] = int(bits)
+        snaps = [dict(e) for e in hits]
+    rec = _rec.get()
+    for s in snaps:
+        rec.link(s)
+
+
+def snapshot() -> List[Dict[str, Any]]:
+    with _lock:
+        return [dict(e) for e in _links.values()]
+
+
+def reset():
+    """Clear the accountant (tests; link records are process-ambient)."""
+    with _lock:
+        _links.clear()
+
+
+def per_step_wire_bytes() -> Dict[str, int]:
+    """Aggregate per-step wire traffic: total and per direction, summed
+    over all clients of every per-step link."""
+    out = {"total": 0, "uplink": 0, "downlink": 0}
+    for e in snapshot():
+        if not e.get("per_step"):
+            continue
+        b = e["wire_bytes_per_client"] * e["n_clients"]
+        out["total"] += b
+        out[e["direction"]] = out.get(e["direction"], 0) + b
+    return out
+
+
+def emit_snapshot(recorder=None):
+    """Mirror every accounted link into a recorder (the trainer calls
+    this at run end so links recorded before ``configure()`` — e.g. a
+    step traced earlier in the process — still land in the run log)."""
+    rec = recorder if recorder is not None else _rec.get()
+    for e in snapshot():
+        rec.link(e)

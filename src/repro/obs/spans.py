@@ -1,0 +1,68 @@
+"""Span helpers beyond the recorder's wall-clock spans.
+
+The pipeline spans (``step/get_batch``, ``step/dispatch``,
+``host/assemble``, ``host/place``, ``h2d/place_batch``,
+``metrics/readback``, ``ckpt/save``) are instrumented strictly at host
+boundaries and close on wall clock — a ``step/dispatch`` span measures
+dispatch latency, NOT device compute (the sync-free loop never blocks
+on the step's outputs; device time keeps coming from the MetricsRing
+readback cadence and the run-level synchronized steps/sec).
+
+For deep dives where device-side timing IS wanted, ``ProfileWindow``
+arms an opt-in ``jax.profiler`` trace over a bounded step window; it is
+entirely inert unless a log directory is given.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.obs import recorder as _rec
+
+
+class ProfileWindow:
+    """Opt-in ``jax.profiler`` trace over steps [start, start+num).
+
+    The trainer calls ``on_step(step)`` at the top of every iteration
+    and ``stop()`` on exit; with ``logdir=None`` both are no-ops. Any
+    profiler failure (unsupported backend, missing deps) disables the
+    window rather than killing the run — profiling must never be
+    load-bearing.
+    """
+
+    def __init__(self, logdir: Optional[str], start_step: int = 5,
+                 num_steps: int = 3):
+        self.logdir = logdir
+        self.start = int(start_step)
+        self.num = max(1, int(num_steps))
+        self._active = False
+        self._done = logdir is None
+
+    def on_step(self, step: int):
+        if self._done:
+            return
+        if not self._active and step >= self.start:
+            try:
+                import jax
+                jax.profiler.start_trace(self.logdir)
+            except Exception as e:  # profiling is best-effort
+                self._done = True
+                _rec.event("profile/start_failed", level="error",
+                           error=repr(e))
+                return
+            self._active = True
+            _rec.event("profile/started", logdir=self.logdir, step=step)
+        elif self._active and step >= self.start + self.num:
+            self.stop()
+
+    def stop(self):
+        if not self._active:
+            self._done = True
+            return
+        try:
+            import jax
+            jax.profiler.stop_trace()
+            _rec.event("profile/stopped", logdir=self.logdir)
+        except Exception as e:
+            _rec.event("profile/stop_failed", level="error", error=repr(e))
+        self._active = False
+        self._done = True

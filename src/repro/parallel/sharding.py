@@ -24,6 +24,8 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import obs
+
 LOGICAL = {
     "batch": ("pod", "data"),
     "client": ("pod", "data"),
@@ -115,17 +117,22 @@ def place_batch(batch, mesh: Optional[Mesh] = None):
     """``device_put`` a host batch directly onto the mesh's client/batch
     layout (no uncommitted transfer + reshard at trace time). Off-mesh, a
     plain committed ``device_put`` — still useful, because running it on
-    the prefetch thread overlaps H2D with device compute."""
-    mesh = mesh if mesh is not None else current_mesh()
-    if mesh is None or mesh.size == 1:
-        dev = (mesh.devices.flat[0] if mesh is not None
-               else jax.local_devices()[0])
+    the prefetch thread overlaps H2D with device compute.
+
+    The ``h2d/place_batch`` span measures dispatch of the transfer (the
+    device_put calls are async); it is a host-boundary wall-clock span
+    and introduces no device sync."""
+    with obs.span("h2d/place_batch"):
+        mesh = mesh if mesh is not None else current_mesh()
+        if mesh is None or mesh.size == 1:
+            dev = (mesh.devices.flat[0] if mesh is not None
+                   else jax.local_devices()[0])
+            return jax.tree_util.tree_map(
+                lambda v: jax.device_put(np.asarray(v), dev), batch)
         return jax.tree_util.tree_map(
-            lambda v: jax.device_put(np.asarray(v), dev), batch)
-    return jax.tree_util.tree_map(
-        lambda v, spec: jax.device_put(np.asarray(v),
-                                       NamedSharding(mesh, spec)),
-        batch, batch_specs(batch, mesh))
+            lambda v, spec: jax.device_put(np.asarray(v),
+                                           NamedSharding(mesh, spec)),
+            batch, batch_specs(batch, mesh))
 
 
 # ---------------------------------------------------------------------------

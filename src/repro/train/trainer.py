@@ -37,8 +37,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as obs_mod
 from repro.checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
 from repro.core import aggregation, mpsl
+from repro.obs.spans import ProfileWindow
 
 
 class MetricsRing:
@@ -75,21 +77,35 @@ class TrainerConfig:
     keep: int = 3
     log_every: int = 10
     metrics_ring: int = 64
+    # opt-in jax.profiler trace window (deep dives; inert when None —
+    # the span telemetry never measures device time, by design)
+    profile_dir: Optional[str] = None
+    profile_start: int = 5
+    profile_steps: int = 3
 
 
 class Trainer:
     def __init__(self, step_fn: Callable, state, loader, config: TrainerConfig,
-                 log_fn: Callable[[str], None] = print):
+                 log_fn: Callable[[str], None] = print,
+                 recorder=None):
         self.step_fn = step_fn
         self.state = state
         self.loader = loader
         self.cfg = config
         self.log = log_fn
+        # ambient recorder resolved at construction; pass one explicitly
+        # to pin a sink. All obs calls are host-side wall-clock only —
+        # the jitted program and its dispatch pattern are identical with
+        # telemetry on or off (asserted in tests/test_pipeline.py).
+        self.obs = recorder if recorder is not None else obs_mod.get()
         self.ckpt = (AsyncCheckpointer(config.ckpt_dir, config.keep)
                      if config.ckpt_dir else None)
         self.metrics_history: list = []
         self.ring = MetricsRing(config.metrics_ring)
         self.step_times: list = []      # host dispatch time per step (s)
+        self._profile = ProfileWindow(config.profile_dir,
+                                      config.profile_start,
+                                      config.profile_steps)
         self._maybe_resume()
 
     # -- fault tolerance ----------------------------------------------------
@@ -126,9 +142,18 @@ class Trainer:
     # -- loop ----------------------------------------------------------------
 
     def _log_latest(self, total: int, t0: float):
-        m = self.ring.read_latest()          # the only mid-loop device sync
+        with self.obs.span("metrics/readback"):
+            m = self.ring.read_latest()      # the only mid-loop device sync
         loss = float(m["loss"])
-        self.metrics_history.append({"step": int(m["step"]), "loss": loss})
+        step = int(m["step"])
+        self.metrics_history.append({"step": step, "loss": loss})
+        self.obs.gauge("train/loss", loss, step=step)
+        self.obs.gauge("train/participating", int(m["participating"]),
+                       step=step)
+        health = getattr(self.loader, "health", None)
+        if callable(health):
+            for k, v in health().items():
+                self.obs.gauge(f"prefetch/{k}", v, step=step)
         self.log(f"[trainer] step {m['step']}/{total} "
                  f"loss={loss:.4f} "
                  f"clients={int(m['participating'])} "
@@ -138,22 +163,33 @@ class Trainer:
         total = steps if steps is not None else self.cfg.total_steps
         t0 = time.perf_counter()
         start = int(self.state["step"])
+        self.obs.event("trainer/run_start", start_step=start,
+                       total_steps=total)
         host_s = 0.0                    # time spent assembling/placing input
         for i in range(start, total):
+            self._profile.on_step(i)
             t_step = time.perf_counter()
-            batch = self.loader.batch(i)
-            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            with self.obs.span("step/get_batch", step=i):
+                batch = self.loader.batch(i)
+                batch = {k: jnp.asarray(v) for k, v in batch.items()}
             t_in = time.perf_counter()
             host_s += t_in - t_step
-            self.state, metrics = self.step_fn(self.state, batch)
+            with self.obs.span("step/dispatch", step=i):
+                self.state, metrics = self.step_fn(self.state, batch)
             self.ring.push(i + 1, metrics)
-            self.step_times.append(time.perf_counter() - t_step)
+            dt = time.perf_counter() - t_step
+            self.step_times.append(dt)
+            self.obs.observe("step/wall_s", dt)
             if (i + 1) % self.cfg.log_every == 0 or i == start:
                 self._log_latest(total, t0)
             if self.ckpt and (i + 1) % self.cfg.ckpt_every == 0:
-                self.ckpt.save(i + 1, self.state)
+                with self.obs.span("ckpt/save", step=i + 1):
+                    self.ckpt.save(i + 1, self.state)
+                self.obs.counter("trainer/checkpoints")
+        self._profile.stop()
         # final readback reflects the LAST step, not the last logged step
-        final = self.ring.read_latest()
+        with self.obs.span("metrics/readback"):
+            final = self.ring.read_latest()
         if final is not None and (not self.metrics_history or
                                   self.metrics_history[-1]["step"]
                                   < int(final["step"])):
@@ -164,9 +200,20 @@ class Trainer:
             self.ckpt.save(total, self.state)
             self.ckpt.wait()
         ran = total - start
-        return {"final_loss": (float(final["loss"])
-                               if final is not None else None),
-                "history": self.metrics_history,
-                "steps_per_sec": (ran / wall) if wall > 0 and ran else 0.0,
-                "host_stall_frac": (host_s / wall) if wall > 0 else 0.0,
-                "wall_s": wall}
+        result = {"final_loss": (float(final["loss"])
+                                 if final is not None else None),
+                  "history": self.metrics_history,
+                  "steps_per_sec": (ran / wall) if wall > 0 and ran else 0.0,
+                  "host_stall_frac": (host_s / wall) if wall > 0 else 0.0,
+                  "wall_s": wall}
+        # close out the run log: link accounting captured at trace time,
+        # histogram aggregations, and the run summary
+        obs_mod.comm.emit_snapshot(self.obs)
+        self.obs.event("trainer/run_end", steps=ran,
+                       final_loss=result["final_loss"],
+                       steps_per_sec=round(result["steps_per_sec"], 4),
+                       host_stall_frac=round(result["host_stall_frac"], 4),
+                       wall_s=round(wall, 4))
+        self.obs.emit_hists()
+        self.obs.flush()
+        return result

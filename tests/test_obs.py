@@ -1,0 +1,291 @@
+"""Observability-layer tests: recorder/report round trips, prefetcher
+health telemetry, and the runtime-vs-analytic cross-check of the
+per-link communication accounting against ``core.costs``."""
+import dataclasses
+import json
+import os
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.configs import MPSLConfig, RunConfig, SHAPES, get_config, reduced
+from repro.core import compression, costs, mpsl, split
+from repro.data import PrefetchLoader
+from repro.launch.train import make_lm_loader
+from repro.obs import comm, report
+from repro.optim import schedules
+from repro.parallel import sharding
+from repro.train import Trainer, TrainerConfig
+
+
+# ---------------------------------------------------------------------------
+# Recorder
+
+
+def test_noop_default_is_inert():
+    assert obs.get().enabled is False
+    with obs.span("x/y", step=1):        # shared null span: no alloc, no IO
+        pass
+    obs.event("x/e")
+    obs.counter("x/c")
+    obs.gauge("x/g", 1.0)
+    obs.observe("x/h", 0.5)
+    assert obs.get() is obs.get()        # singleton
+
+
+def test_recorder_jsonl_roundtrip(tmp_path):
+    path = tmp_path / "log.jsonl"
+    with obs.enabled(str(path), meta={"who": "test"}) as rec:
+        assert obs.get() is rec and rec.enabled
+        with rec.span("stage/a", step=3):
+            pass
+        rec.counter("n/steps", 2)
+        rec.counter("n/steps", 3)
+        rec.gauge("q/depth", 4, step=3)
+        rec.observe("wall_s", 0.25)
+        rec.observe("wall_s", 0.75)
+        rec.event("boom", level="error", detail="x")
+        # error events flush immediately (crash durability): visible
+        # before close
+        on_disk = [json.loads(l) for l in path.read_text().splitlines()]
+        assert any(r["kind"] == "event" and r["level"] == "error"
+                   for r in on_disk)
+    assert obs.get().enabled is False    # context restored the no-op
+    recs = report.load_records(str(path))
+    by_kind = {}
+    for r in recs:
+        by_kind.setdefault(r["kind"], []).append(r)
+    assert by_kind["meta"][0]["fields"] == {"who": "test"}
+    span = by_kind["span"][0]
+    assert span["name"] == "stage/a" and span["dur_s"] >= 0
+    assert span["fields"] == {"step": 3}
+    assert by_kind["counter"][-1]["total"] == 5
+    hist = [h for h in by_kind["hist"] if h["name"] == "wall_s"][0]
+    assert hist["count"] == 2 and hist["sum"] == 1.0
+    assert hist["min"] == 0.25 and hist["max"] == 0.75
+
+
+def test_report_renders_tables():
+    records = [
+        {"kind": "meta", "name": "run", "run_id": "abc", "fields": {}},
+        {"kind": "span", "name": "step/dispatch", "dur_s": 0.01,
+         "fields": {}},
+        {"kind": "span", "name": "step/dispatch", "dur_s": 0.03,
+         "fields": {}},
+        {"kind": "link", "name": "uplink.activations",
+         "direction": "uplink", "n_clients": 4,
+         "per_client_shape": [2, 32, 64], "dtype": "bfloat16",
+         "raw_bytes_per_client": 8192, "wire_bytes_per_client": 4352,
+         "compressed": True, "bits": 8, "per_step": True,
+         "quantized_in_trace": True},
+        {"kind": "gauge", "name": "prefetch/queue_depth", "value": 2},
+        {"kind": "event", "name": "prefetch/producer_error",
+         "level": "error", "fields": {"step": 7, "error": "boom"}},
+    ]
+    out = report.render(records)
+    assert "step/dispatch" in out and "uplink.activations" in out
+    assert "traced" in out               # quant state column
+    assert "ERROR prefetch/producer_error" in out
+    # per-step aggregate: 4 clients x 4352 wire bytes = 17408 = 17.0KB
+    assert "17.0KB" in out
+
+
+# ---------------------------------------------------------------------------
+# Prefetcher health telemetry
+
+
+class _Boom:
+    def batch(self, step):
+        if step == 3:
+            raise RuntimeError("boom")
+        return {"x": np.zeros(2)}
+
+
+def test_prefetch_health_gauges_and_terminal_error_event(tmp_path):
+    path = tmp_path / "log.jsonl"
+    with obs.enabled(str(path)):
+        pf = PrefetchLoader(_Boom(), depth=2)
+        pf.batch(0)
+        pf.batch(1)
+        h = pf.health()
+        assert h["restarts"] == 1 and h["queue_capacity"] == 2
+        assert h["produced"] >= 2
+        assert h["producer_wait_s"] >= 0.0
+        # out-of-order read reseeds the producer
+        pf.batch(0)
+        assert pf.health()["restarts"] == 2
+        with pytest.raises(RuntimeError, match="boom"):
+            for k in range(1, 5):
+                pf.batch(k)
+        assert isinstance(pf.last_error, RuntimeError)
+    recs = report.load_records(str(path))
+    errs = [r for r in recs if r.get("kind") == "event"
+            and r.get("level") == "error"]
+    assert errs and errs[0]["name"] == "prefetch/producer_error"
+    assert errs[0]["fields"]["step"] == 3
+    spans = {r["name"] for r in recs if r.get("kind") == "span"}
+    assert "host/assemble" in spans
+
+
+# ---------------------------------------------------------------------------
+# Runtime link accounting vs the core.costs analytic model
+
+
+def _trace_lm_links(compressed: bool, n=2, bn=2, seq=32):
+    comm.reset()
+    cfg = reduced(get_config("minitron-4b"))
+    mp = MPSLConfig(n_clients=n, trainable_blocks=1, head_adapter_rank=4,
+                    compress_uplink=compressed,
+                    compress_downlink=compressed)
+    shape = dataclasses.replace(SHAPES["train_4k"], seq_len=seq)
+    run = RunConfig(model=cfg, shape=shape, mpsl=mp,
+                    compute_dtype="bfloat16")
+    params, frozen, _ = split.init_mpsl_lm(jax.random.PRNGKey(0), cfg, run)
+    loss_fn = mpsl.make_lm_loss(cfg, run)
+    batch = {"tokens": jnp.zeros((n, bn, seq), jnp.int32),
+             "labels": jnp.zeros((n, bn, seq), jnp.int32),
+             "mask": jnp.ones((n,), jnp.float32)}
+    # the loss trace alone fires the accounting hooks — no compute on
+    # the batch path, no compile
+    jax.eval_shape(loss_fn, params, frozen, batch, jax.random.PRNGKey(1))
+    links = {e["name"]: e for e in comm.snapshot()}
+    return cfg, mp, shape, links
+
+
+@pytest.mark.parametrize("compressed", [False, True])
+def test_runtime_link_bytes_match_analytic_model(compressed):
+    """Measured per-step link bytes must agree with the core.costs
+    analytic model: exactly when uncompressed, within the per-row quant8
+    scale overhead when compressed."""
+    bn, seq = 2, 32
+    cfg, mp, shape, links = _trace_lm_links(compressed, bn=bn, seq=seq)
+    up = links["uplink.activations"]
+    down = links["downlink.gradients"]
+    assert up["n_clients"] == mp.n_clients
+    assert up["per_client_shape"] == [bn, seq, cfg.d_model]
+    assert up["compressed"] is compressed
+
+    measured_per_sample = (up["wire_bytes_per_client"]
+                           + down["wire_bytes_per_client"]) / bn
+    analytic = costs.mpsl_lm_client_cost(
+        cfg, mp, shape, compressed=compressed).comm_mb_per_epoch * 1e6
+    overhead = (2 * seq * compression.SCALE_BYTES) if compressed else 0
+    assert 0 <= measured_per_sample - analytic <= overhead, (
+        measured_per_sample, analytic, overhead)
+    if compressed:
+        # the quant kernel was actually traced into the program, and the
+        # wire format matches compression.compressed_bytes exactly
+        assert up.get("quantized_in_trace") is True
+        assert up["wire_bytes_per_client"] == compression.compressed_bytes(
+            (bn, seq, cfg.d_model))
+    else:
+        assert up["wire_bytes_per_client"] == up["raw_bytes_per_client"]
+    # one-time head-FedAvg link from core.split
+    head = links["aggregation.client_head"]
+    assert head["per_step"] is False
+    assert head["raw_bytes_per_client"] == head["wire_bytes_per_client"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Steps/sec regression gate (CI satellite)
+
+
+def test_regression_check_gates_on_ratio():
+    from benchmarks.regression_check import check
+
+    base = {"entries": [
+        {"cell": "a", "variant": "overlap", "steps_per_sec": 10.0},
+        {"cell": "b", "variant": "overlap", "steps_per_sec": 4.0},
+        {"cell": "retired", "variant": "overlap", "steps_per_sec": 1.0},
+    ]}
+    new = {"entries": [
+        {"cell": "a", "variant": "overlap", "steps_per_sec": 9.0},
+        {"cell": "b", "variant": "overlap", "steps_per_sec": 1.0},
+        {"cell": "fresh", "variant": "overlap", "steps_per_sec": 2.0},
+    ]}
+    rows = {(r["cell"], r["variant"]): r
+            for r in check(new, base, min_ratio=0.5)}
+    assert rows[("a", "overlap")]["status"] == "ok"
+    assert rows[("b", "overlap")]["status"] == "FAIL"      # 0.25 < 0.5
+    # added/retired cells are reported, never gated on
+    assert rows[("retired", "overlap")]["status"] == "missing-in-new"
+    assert rows[("fresh", "overlap")]["status"] == "missing-in-baseline"
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: obs-enabled trainer produces a renderable run log without
+# changing the dispatch/sync pattern
+
+
+def test_trainer_obs_end_to_end(tmp_path, monkeypatch):
+    log_dir = os.environ.get("OBS_LOG_DIR")      # CI uploads this artifact
+    base = pathlib.Path(log_dir) if log_dir else tmp_path
+    base.mkdir(parents=True, exist_ok=True)
+    log_path = base / "trainer_runlog.jsonl"
+
+    comm.reset()
+    blocks = []
+    real_block = jax.block_until_ready
+    monkeypatch.setattr(
+        jax, "block_until_ready",
+        lambda x: (blocks.append(1), real_block(x))[1])
+
+    steps = 5
+    with obs.enabled(str(log_path), meta={"test": "trainer_e2e"}):
+        cfg = reduced(get_config("minitron-4b"))
+        mp = MPSLConfig(n_clients=2, trainable_blocks=1,
+                        head_adapter_rank=4)
+        run = RunConfig(model=cfg, shape=SHAPES["train_4k"], mpsl=mp,
+                        compute_dtype="float32", learning_rate=1e-3)
+        params, frozen, _ = split.init_mpsl_lm(jax.random.PRNGKey(0), cfg,
+                                               run)
+        state = mpsl.place_state(mpsl.init_state(params, frozen))
+        loss_fn = mpsl.make_lm_loss(cfg, run)
+        step_fn = mpsl.jit_train_step(
+            mpsl.make_train_step(loss_fn, run, schedules.constant(1e-3)))
+        dispatches = []
+
+        def counted_step(state, batch):
+            dispatches.append(1)
+            return step_fn(state, batch)
+
+        loader = PrefetchLoader(make_lm_loader(cfg, 2, 2, 24, seed=0),
+                                depth=2, place_fn=sharding.place_batch)
+        t = Trainer(counted_step, state, loader,
+                    TrainerConfig(total_steps=steps, log_every=100),
+                    log_fn=lambda s: None)
+        out = t.run()
+        loader.close()
+
+    assert out["final_loss"] is not None
+    # telemetry neutrality: one dispatch per step, and the only device
+    # syncs are the two log-boundary readbacks (first-step log + final)
+    assert len(dispatches) == steps
+    assert len(blocks) == 2
+
+    recs = report.load_records(str(log_path))
+    spans = {}
+    for r in recs:
+        if r.get("kind") == "span":
+            spans[r["name"]] = spans.get(r["name"], 0) + 1
+    assert spans["step/dispatch"] == steps
+    assert spans["step/get_batch"] == steps
+    assert spans["metrics/readback"] == 2
+    assert spans.get("host/assemble", 0) >= steps      # prefetch producer
+    assert spans.get("h2d/place_batch", 0) >= steps
+    links = {r["name"] for r in recs if r.get("kind") == "link"}
+    assert "uplink.activations" in links
+    assert "downlink.gradients" in links
+    gauges = {r["name"] for r in recs if r.get("kind") == "gauge"}
+    assert "train/loss" in gauges and "prefetch/queue_depth" in gauges
+    hists = {r["name"] for r in recs if r.get("kind") == "hist"}
+    assert "step/wall_s" in hists
+    events = {r["name"] for r in recs if r.get("kind") == "event"}
+    assert {"trainer/run_start", "trainer/run_end"} <= events
+    rendered = report.render(recs)
+    assert "step/dispatch" in rendered
+    assert "uplink.activations" in rendered

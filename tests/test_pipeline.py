@@ -162,6 +162,61 @@ def test_metrics_ring_keeps_latest():
     assert float(got["loss"]) == 7.0
 
 
+def test_metrics_ring_wraparound_bounds_live_entries():
+    """Wraparound keeps at most `size` entries alive (the memory bound
+    that lets the host run ahead without holding every step's metrics),
+    and they are exactly the most recent `size` steps."""
+    ring = MetricsRing(4)
+    for s in range(1, 10):
+        ring.push(s, {"loss": jnp.float32(s)})
+    live = [e for e in ring._slots if e is not None]
+    assert len(live) == 4
+    assert sorted(step for step, _ in live) == [6, 7, 8, 9]
+    assert ring.read_latest()["step"] == 9
+
+
+def test_metrics_ring_overflow_slot_collision():
+    """Pushing a step `size` ahead of a live entry overwrites that slot
+    (step % size collision): the old metrics are dropped, latest() still
+    resolves by step number, and an empty ring reads as None."""
+    ring = MetricsRing(4)
+    ring.push(1, {"loss": jnp.float32(1.0)})
+    ring.push(5, {"loss": jnp.float32(5.0)})   # 5 % 4 == 1: same slot
+    live = [e for e in ring._slots if e is not None]
+    assert len(live) == 1
+    got = ring.read_latest()
+    assert got["step"] == 5 and float(got["loss"]) == 5.0
+    assert MetricsRing(2).latest() is None
+    assert MetricsRing(2).read_latest() is None
+
+
+def test_obs_enabled_leaves_step_jaxpr_unchanged(tmp_path):
+    """Telemetry neutrality: the traced program of the jitted train step
+    is bit-for-bit identical with the recorder disabled vs enabled — the
+    obs hooks fire on the host at trace time and insert nothing into the
+    computation."""
+    from repro import obs
+    from repro.core import mpsl as mpsl_mod
+
+    cfg = reduced(get_config("minitron-4b"))
+    mp = MPSLConfig(n_clients=2, trainable_blocks=1, head_adapter_rank=4,
+                    compress_uplink=True, compress_downlink=True)
+    run = RunConfig(model=cfg, shape=SHAPES["train_4k"], mpsl=mp,
+                    compute_dtype="float32", learning_rate=1e-3)
+    params, frozen, _ = split.init_mpsl_lm(jax.random.PRNGKey(0), cfg, run)
+    state = mpsl_mod.init_state(params, frozen)
+    loss_fn = mpsl_mod.make_lm_loss(cfg, run)
+    step = mpsl_mod.make_train_step(loss_fn, run, schedules.constant(1e-3))
+    loader = make_lm_loader(cfg, 2, 2, 24, seed=0)
+    batch = {k: jnp.asarray(v) for k, v in loader.batch(0).items()}
+
+    assert not obs.get().enabled
+    jaxpr_off = str(jax.make_jaxpr(step)(state, batch))
+    with obs.enabled(str(tmp_path / "log.jsonl")):
+        jaxpr_on = str(jax.make_jaxpr(step)(state, batch))
+    assert jaxpr_on == jaxpr_off
+
+
 @pytest.mark.slow
 def test_trainer_overlapped_end_to_end():
     """Full pipeline: prefetch + donation + sync-free metrics, and the
