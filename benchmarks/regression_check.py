@@ -10,19 +10,39 @@ drops below ``min_ratio`` of the baseline:
       --bench /tmp/bench_new.json [--baseline BENCH_pipeline.json] \
       [--min-ratio 0.5]
 
-Absolute steps/sec moves with the machine (the committed baseline comes
-from a 1-core container), so CI runs this with a loose ratio — the gate
-is for order-of-magnitude pipeline regressions (a reintroduced per-step
-sync, a serialized prefetcher), not single-digit-percent noise. Use
-``--update`` to rewrite the baseline from the new measurement.
+Absolute steps/sec moves with the machine, so the baseline is resolved
+per runner class: ``--baseline-class gha-ubuntu`` looks for
+``BENCH_pipeline.gha-ubuntu.json`` next to the default baseline (one
+committed file per machine class that runs the gate) and falls back to
+the class-less baseline with a warning when the class file is missing.
+A same-class baseline lets CI gate at ``--min-ratio 0.5`` instead of
+the old cross-machine 0.2 — still above noise, but a reintroduced
+per-step sync or serialized prefetcher no longer hides behind machine
+variance. Use ``--update`` (with the same ``--baseline-class``) to
+rewrite a class baseline from a fresh measurement on that runner.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import shutil
 import sys
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
+
+
+def resolve_baseline(baseline: str, baseline_class: Optional[str]
+                     ) -> Tuple[str, bool]:
+    """Resolve the per-runner-class baseline path:
+    (BENCH_pipeline.json, 'gha-ubuntu') -> BENCH_pipeline.gha-ubuntu.json.
+    Returns (path, class_file_found)."""
+    if not baseline_class:
+        return baseline, True
+    root, ext = os.path.splitext(baseline)
+    cand = f"{root}.{baseline_class}{ext}"
+    if os.path.exists(cand):
+        return cand, True
+    return baseline, False
 
 
 def _index(doc: dict) -> Dict[Tuple[str, str], dict]:
@@ -62,20 +82,34 @@ def main(argv=None) -> int:
                    help="freshly measured BENCH_pipeline.json")
     p.add_argument("--baseline", default="BENCH_pipeline.json",
                    help="committed baseline to diff against")
+    p.add_argument("--baseline-class", default=None,
+                   help="runner class: resolve BENCH_pipeline.<class>.json "
+                        "next to --baseline (falls back to --baseline "
+                        "with a warning when the class file is missing)")
     p.add_argument("--min-ratio", type=float, default=0.5,
                    help="fail when new steps/sec < ratio * baseline")
     p.add_argument("--update", action="store_true",
-                   help="copy --bench over --baseline instead of gating")
+                   help="copy --bench over the resolved baseline "
+                        "instead of gating")
     args = p.parse_args(argv)
 
     with open(args.bench) as f:
         new = json.load(f)
     if args.update:
-        shutil.copyfile(args.bench, args.baseline)
-        print(f"[regression] baseline updated <- {args.bench}")
+        root, ext = os.path.splitext(args.baseline)
+        target = (f"{root}.{args.baseline_class}{ext}"
+                  if args.baseline_class else args.baseline)
+        shutil.copyfile(args.bench, target)
+        print(f"[regression] baseline updated: {target} <- {args.bench}")
         return 0
-    with open(args.baseline) as f:
+    path, found = resolve_baseline(args.baseline, args.baseline_class)
+    if not found:
+        print(f"[regression] WARNING no baseline for class "
+              f"{args.baseline_class!r}; falling back to {path} "
+              f"(cross-machine — consider a looser --min-ratio)")
+    with open(path) as f:
         baseline = json.load(f)
+    print(f"[regression] baseline: {path}")
 
     rows = check(new, baseline, min_ratio=args.min_ratio)
     failures = 0

@@ -20,6 +20,8 @@ import jax
 import numpy as np
 from jax.numpy import asarray as jnp_asarray
 
+from repro import faults, obs
+
 
 def _is_key(leaf) -> bool:
     try:
@@ -55,6 +57,7 @@ def _flatten_with_paths(tree):
 
 def save_checkpoint(directory: str, step: int, tree, extra: Optional[Dict]
                     = None, keep: int = 3):
+    faults.get().ckpt_write(step)              # injection site (no-op default)
     os.makedirs(directory, exist_ok=True)
     final = os.path.join(directory, f"step_{step:08d}")
     tmp = final + ".tmp"
@@ -142,11 +145,22 @@ def restore_checkpoint(directory: str, template, step: Optional[int] = None,
 
 
 class AsyncCheckpointer:
-    """Fire-and-forget checkpoint writes on a background thread."""
+    """Fire-and-forget checkpoint writes on a background thread.
 
-    def __init__(self, directory: str, keep: int = 3):
+    A failed write is retried in place up to ``retries`` times with
+    linear backoff (the temp-dir + atomic-rename layout makes a retry
+    safe at any point: a partial write never shadows a complete
+    checkpoint). Each retry is recorded as a ``fault/ckpt_retry`` obs
+    event; only an exhausted retry budget surfaces the error on the
+    next ``wait()`` — the run stays resumable from the previous
+    complete checkpoint either way."""
+
+    def __init__(self, directory: str, keep: int = 3, retries: int = 2,
+                 backoff_s: float = 0.05):
         self.directory = directory
         self.keep = keep
+        self.retries = int(retries)
+        self.backoff_s = float(backoff_s)
         self._thread: Optional[threading.Thread] = None
         self.last_error: Optional[BaseException] = None
 
@@ -155,11 +169,20 @@ class AsyncCheckpointer:
         host_tree = jax.tree_util.tree_map(_to_host, tree)
 
         def work():
-            try:
-                save_checkpoint(self.directory, step, host_tree, extra,
-                                self.keep)
-            except BaseException as e:     # surfaced on next wait()
-                self.last_error = e
+            for attempt in range(self.retries + 1):
+                try:
+                    save_checkpoint(self.directory, step, host_tree, extra,
+                                    self.keep)
+                    return
+                except BaseException as e:  # surfaced on next wait()
+                    if attempt >= self.retries:
+                        self.last_error = e
+                        return
+                    obs.event("fault/ckpt_retry", step=step,
+                              attempt=attempt + 1,
+                              max_retries=self.retries, error=repr(e))
+                    obs.counter("fault/ckpt_retries")
+                    time.sleep(self.backoff_s * (attempt + 1))
 
         self._thread = threading.Thread(target=work, daemon=True)
         self._thread.start()

@@ -316,13 +316,24 @@ def _split_microbatches(batch, mu: int):
 
 
 def make_train_step(loss_fn, run, sched, backward_mode: str = "aggregated",
-                    microbatches: int = 1):
+                    microbatches: int = 1, guard_nonfinite: bool = False):
     """One MPSL optimization step (client + server updates).
 
     aggregated  — the paper's single backward pass over L_S.
     per_client  — vanilla-PSL baseline: N separate backward passes
                   (lax.map over clients), summed. Gradients are identical
-                  (linearity); cost is not — used by the benchmarks."""
+                  (linearity); cost is not — used by the benchmarks.
+
+    guard_nonfinite — opt-in robustness (chaos runs / --fault-plan): when
+    the aggregated loss or the clipped grad norm is non-finite, the step
+    keeps params and BOTH Adam moments (incl. the count) bitwise
+    unchanged via a traced select — donated-state-safe (the select reads
+    the donated input buffers, no host roundtrip, no extra dispatch) and
+    sync-free. The step counter still advances so the step-indexed
+    loader/rng schedule stays aligned with the loop index (restart
+    invariance). ``metrics["skipped"]`` carries the flag to the host at
+    the normal readback cadence. Default False: the traced program is
+    identical to a guard-free build (telemetry/fault neutrality)."""
 
     def grad_agg(params, frozen, batch, rng):
         if microbatches <= 1:
@@ -361,6 +372,21 @@ def make_train_step(loss_fn, run, sched, backward_mode: str = "aggregated",
             weight_decay=run.weight_decay)
         params = apply_updates(state["params"], updates)
         metrics = dict(metrics, grad_norm=gnorm, lr=lr)
+        if guard_nonfinite:
+            ok = jnp.isfinite(loss) & jnp.isfinite(gnorm)
+
+            def keep(new, old):
+                return jnp.where(ok, new, old.astype(new.dtype))
+
+            params = jax.tree_util.tree_map(keep, params, state["params"])
+            opt = jax.tree_util.tree_map(keep, opt, state["opt"])
+            okf = ok.astype(jnp.float32)
+            metrics["skipped"] = 1.0 - okf
+            # a skipped round contributed nothing; sanitize the fields
+            # the host coerces at log boundaries
+            metrics["participating"] = jnp.where(
+                jnp.isfinite(metrics["participating"]),
+                metrics["participating"], 0.0) * okf
         new_state = {"params": params, "frozen": state["frozen"],
                      "opt": opt, "step": state["step"] + 1,
                      "rng": state["rng"]}

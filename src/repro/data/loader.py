@@ -4,12 +4,22 @@ Produces MPSL batches {modality: [N, Bn, ...], labels, mask} for a given
 global step. Sampling within each client's Dirichlet shard is a pure
 function of (seed, step) — a restarted job at step k sees exactly the
 batch the failed job would have seen, prefetched or not (fault-tolerance
-invariant, covered by tests)."""
+invariant, covered by tests).
+
+Elastic participation: after the static Bernoulli dropout mask is drawn,
+the ambient fault injector (``repro.faults``) applies RUNTIME straggler
+cutoffs, client drops, and batch poisoning for the step — with no plan
+active the hook is a no-op and the stream is byte-identical. The final
+per-step participation is reported to ``obs.comm`` so link accounting
+can weight per-step wire bytes by who actually transmitted."""
 from __future__ import annotations
 
 from typing import Dict, List, Optional
 
 import numpy as np
+
+from repro import faults
+from repro.obs import comm as obs_comm
 
 
 class ClientLoader:
@@ -42,4 +52,9 @@ class ClientLoader:
         if not mask.any():
             mask[int(rmask.integers(0, self.n_clients))] = True
         out["mask"] = mask.astype(np.float32)
+        out = faults.get().batch_hook(step, out)
+        m = np.asarray(out["mask"])
+        # a NaN-poisoned client counts as non-participating on the wire
+        obs_comm.note_participation(
+            step, float(m[np.isfinite(m)].sum()), int(m.shape[0]))
         return out

@@ -23,7 +23,7 @@ import threading
 import time
 from typing import Callable, Optional
 
-from repro import obs
+from repro import faults, obs
 
 
 class PrefetchLoader:
@@ -39,18 +39,29 @@ class PrefetchLoader:
     error is no longer silent until the next ``get``: it is recorded as
     a terminal error event in the ambient obs run log the moment it
     happens, in addition to re-raising on the consumer side.
+
+    Recovery: a producer crash is retried up to ``max_retries`` times
+    with linear backoff — the producer is reseeded at the failed step
+    and, because the loader is pure in (seed, step), the recovered
+    stream is bitwise-identical to one that never crashed. Retries are
+    bounded so a deterministic bug (every attempt fails) still surfaces
+    as the original exception rather than a livelock.
     """
 
     def __init__(self, loader, depth: int = 2,
-                 place_fn: Optional[Callable] = None):
+                 place_fn: Optional[Callable] = None,
+                 max_retries: int = 2, retry_backoff_s: float = 0.05):
         self.inner = loader
         self.depth = int(depth)
         self.place = place_fn if place_fn is not None else (lambda b: b)
+        self.max_retries = int(max_retries)
+        self.retry_backoff_s = float(retry_backoff_s)
         self._q: Optional[queue.Queue] = None
         self._thread: Optional[threading.Thread] = None
         self._stop: Optional[threading.Event] = None
         self._next_consume: Optional[int] = None
         self.restarts = 0               # producer reseeds (resume/ooo reads)
+        self.retries = 0                # producer crash recoveries
         self.last_error: Optional[BaseException] = None
         self._produced = 0
         self._wait_s = 0.0              # producer time blocked on full queue
@@ -60,12 +71,23 @@ class PrefetchLoader:
     def batch(self, step: int):
         if self.depth <= 0:
             return self.place(self.inner.batch(step))
-        if self._thread is None or step != self._next_consume:
-            self._restart(step)
-        got, payload, err = self._q.get()
-        if err is not None:
+        attempts = 0
+        while True:
+            if self._thread is None or step != self._next_consume:
+                self._restart(step)
+            got, payload, err = self._q.get()
+            if err is None:
+                break
             self.close()
-            raise err
+            attempts += 1
+            if attempts > self.max_retries:
+                raise err
+            self.retries += 1
+            obs.event("fault/prefetch_restart", step=step,
+                      attempt=attempts, max_retries=self.max_retries,
+                      error=repr(err))
+            obs.counter("fault/prefetch_restarts")
+            time.sleep(self.retry_backoff_s * attempts)
         assert got == step, (got, step)
         self._next_consume = step + 1
         return payload
@@ -79,6 +101,7 @@ class PrefetchLoader:
             "queue_capacity": self.depth,
             "produced": self._produced,
             "restarts": self.restarts,
+            "retries": self.retries,
             "producer_wait_s": round(self._wait_s, 6),
         }
 
@@ -98,6 +121,7 @@ class PrefetchLoader:
     def _produce(self, step: int, q: queue.Queue, stop: threading.Event):
         while not stop.is_set():
             try:
+                faults.get().producer(step)        # crash/delay injection
                 with obs.span("host/assemble", step=step):
                     payload = self.inner.batch(step)
                 with obs.span("host/place", step=step):

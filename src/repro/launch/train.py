@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import obs
+from repro import faults, obs
 from repro.configs import (MPSLConfig, RunConfig, SHAPES, get_config, reduced)
 from repro.core import mpsl, split
 from repro.data import (ClientLoader, PrefetchLoader, SyntheticLM,
@@ -69,6 +69,16 @@ def main(argv=None):
     p.add_argument("--obs-log", default=None,
                    help="write a JSONL telemetry run log to this path "
                         "(render with `python -m repro.obs.report`)")
+    p.add_argument("--obs-log-max-bytes", type=int, default=None,
+                   help="rotate the run log to <path>.1 past this size "
+                        "(bounds long chaos/soak runs to ~2x the cap)")
+    p.add_argument("--fault-plan", default=None,
+                   help="chaos mode: a FaultPlan JSON file or inline "
+                        "spec, e.g. 'producer_crash@3,nan_batch@13,"
+                        "straggler@11:1:0.2,ckpt_fail@20'. Activates "
+                        "injection plus the recovery machinery "
+                        "(non-finite step guard, producer/checkpoint "
+                        "retries)")
     p.add_argument("--profile-dir", default=None,
                    help="opt-in jax.profiler trace window directory")
     args = p.parse_args(argv)
@@ -81,7 +91,19 @@ def main(argv=None):
                             "n_clients": args.n_clients,
                             "batch_per_client": args.batch_per_client,
                             "seq": args.seq, "compress": args.compress,
-                            "prefetch": args.prefetch, "seed": args.seed})
+                            "prefetch": args.prefetch, "seed": args.seed,
+                            "fault_plan": args.fault_plan},
+                      max_bytes=args.obs_log_max_bytes)
+
+    fault_plan = (faults.FaultPlan.from_spec(args.fault_plan)
+                  if args.fault_plan else None)
+    if fault_plan is not None:
+        faults.activate(fault_plan)
+        log.info(f"fault plan active: {len(fault_plan.events)} events "
+                 f"({', '.join(fault_plan.kinds_present())}), "
+                 f"deadline {fault_plan.deadline_s}s",
+                 n_events=len(fault_plan.events),
+                 kinds=fault_plan.kinds_present())
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -99,8 +121,10 @@ def main(argv=None):
     state = mpsl.place_state(mpsl.init_state(params, frozen, args.seed))
     loss_fn = mpsl.make_lm_loss(cfg, run)
     sched = schedules.warmup_cosine(args.lr, 10, args.steps)
-    step_fn = mpsl.jit_train_step(mpsl.make_train_step(loss_fn, run, sched),
-                                  donate=args.donate)
+    step_fn = mpsl.jit_train_step(
+        mpsl.make_train_step(loss_fn, run, sched,
+                             guard_nonfinite=fault_plan is not None),
+        donate=args.donate)
 
     loader = PrefetchLoader(
         make_lm_loader(cfg, args.n_clients, args.batch_per_client,
@@ -119,6 +143,14 @@ def main(argv=None):
              final_loss=result["final_loss"],
              steps_per_sec=round(result["steps_per_sec"], 4),
              host_stall_frac=round(result["host_stall_frac"], 4))
+    if fault_plan is not None:
+        log.info(f"chaos: {len(trainer.skipped_steps)} step(s) skipped by "
+                 f"the non-finite guard, "
+                 f"{loader.retries} producer retr"
+                 f"{'y' if loader.retries == 1 else 'ies'}",
+                 skipped_steps=result["skipped_steps"],
+                 producer_retries=loader.retries)
+        faults.deactivate()
     if args.obs_log:
         obs.shutdown()
         log.info(f"run log -> {args.obs_log} "

@@ -46,6 +46,9 @@ from repro.obs import recorder as _rec
 
 _lock = threading.Lock()
 _links: Dict[str, Dict[str, Any]] = {}
+# step -> (participating clients, total clients); keyed by step so
+# speculative prefetch re-assembly and restart replays stay idempotent
+_participation: Dict[int, tuple] = {}
 
 
 def _store(name: str, fields: Dict[str, Any]):
@@ -130,6 +133,28 @@ def note_quant(shape, bits: int, impl: str):
         rec.link(s)
 
 
+def note_participation(step: int, participating: float, n_clients: int):
+    """Record how many clients actually transmitted at ``step`` (the
+    runtime participation mask after dropout/straggler cutoff — the
+    loader reports it per assembled batch). The trace-time link records
+    are static shapes that assume full participation; this is the
+    runtime weighting that corrects the per-step aggregates."""
+    with _lock:
+        _participation[int(step)] = (float(participating), int(n_clients))
+
+
+def participation_summary() -> Dict[str, Any]:
+    """Mean/min participation fraction across the recorded steps;
+    ``avg_frac`` is 1.0 when nothing was recorded (full participation)."""
+    with _lock:
+        vals = list(_participation.values())
+    if not vals:
+        return {"steps": 0, "avg_frac": 1.0, "min_frac": 1.0}
+    fr = [p / max(n, 1) for p, n in vals]
+    return {"steps": len(vals), "avg_frac": sum(fr) / len(fr),
+            "min_frac": min(fr)}
+
+
 def snapshot() -> List[Dict[str, Any]]:
     with _lock:
         return [dict(e) for e in _links.values()]
@@ -139,11 +164,14 @@ def reset():
     """Clear the accountant (tests; link records are process-ambient)."""
     with _lock:
         _links.clear()
+        _participation.clear()
 
 
-def per_step_wire_bytes() -> Dict[str, int]:
+def per_step_wire_bytes() -> Dict[str, Any]:
     """Aggregate per-step wire traffic: total and per direction, summed
-    over all clients of every per-step link."""
+    over all clients of every per-step link — plus the mask-aware
+    ``total_masked`` (total weighted by the mean runtime participation
+    fraction), which is what dropout/straggler runs actually moved."""
     out = {"total": 0, "uplink": 0, "downlink": 0}
     for e in snapshot():
         if not e.get("per_step"):
@@ -151,13 +179,24 @@ def per_step_wire_bytes() -> Dict[str, int]:
         b = e["wire_bytes_per_client"] * e["n_clients"]
         out["total"] += b
         out[e["direction"]] = out.get(e["direction"], 0) + b
+    ps = participation_summary()
+    out["participation_frac"] = ps["avg_frac"]
+    out["total_masked"] = int(round(out["total"] * ps["avg_frac"]))
     return out
 
 
 def emit_snapshot(recorder=None):
     """Mirror every accounted link into a recorder (the trainer calls
     this at run end so links recorded before ``configure()`` — e.g. a
-    step traced earlier in the process — still land in the run log)."""
+    step traced earlier in the process — still land in the run log),
+    plus the runtime participation gauges that weight the per-step
+    aggregate."""
     rec = recorder if recorder is not None else _rec.get()
     for e in snapshot():
         rec.link(e)
+    ps = participation_summary()
+    if ps["steps"]:
+        agg = per_step_wire_bytes()
+        rec.gauge("comm/participation_frac", round(ps["avg_frac"], 6),
+                  steps=ps["steps"], min_frac=round(ps["min_frac"], 6))
+        rec.gauge("comm/per_step_wire_bytes_masked", agg["total_masked"])

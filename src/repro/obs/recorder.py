@@ -155,14 +155,24 @@ class _Hist:
 
 class Recorder:
     """Buffered JSONL sink. Thread-safe (spans run on the prefetch
-    producer thread as well as the trainer loop)."""
+    producer thread as well as the trainer loop).
+
+    ``max_bytes`` caps the log: when the file crosses it after a flush,
+    it rotates to ``<path>.1`` (replacing any previous rotation) and a
+    fresh file — with the run's meta record re-emitted so the tail log
+    stays self-describing — takes over. Total footprint is therefore
+    bounded by ~2x max_bytes however long a chaos/soak run goes; the
+    default (None) keeps today's append-forever behavior."""
     enabled = True
 
     def __init__(self, path, run_id: Optional[str] = None,
                  meta: Optional[Dict[str, Any]] = None,
-                 flush_every: int = 256):
+                 flush_every: int = 256,
+                 max_bytes: Optional[int] = None):
         self.path = str(path)
         self.run_id = run_id or uuid.uuid4().hex[:12]
+        self.max_bytes = int(max_bytes) if max_bytes else None
+        self.rotations = 0
         self._lock = threading.Lock()
         self._buf: list = []
         self._flush_every = int(flush_every)
@@ -173,8 +183,10 @@ class Recorder:
         os.makedirs(parent, exist_ok=True)
         self._f = open(self.path, "a")
         self._closed = False
-        self._emit({"kind": "meta", "name": "run", "run_id": self.run_id,
-                    "fields": dict(meta or {})}, urgent=True)
+        self._meta_rec = {"kind": "meta", "name": "run",
+                          "run_id": self.run_id,
+                          "fields": dict(meta or {})}
+        self._emit(dict(self._meta_rec), urgent=True)
 
     # -- sinks ----------------------------------------------------------------
 
@@ -194,6 +206,19 @@ class Recorder:
                         for r in self._buf)
         self._buf.clear()
         self._f.write(lines)
+        self._f.flush()
+        if self.max_bytes and self._f.tell() >= self.max_bytes:
+            self._rotate_locked()
+
+    def _rotate_locked(self):
+        self._f.close()
+        os.replace(self.path, self.path + ".1")
+        self._f = open(self.path, "a")
+        self.rotations += 1
+        header = [dict(self._meta_rec, ts=time.time(),
+                       rotation=self.rotations)]
+        self._f.write("".join(json.dumps(r, default=_jsonable) + "\n"
+                              for r in header))
         self._f.flush()
 
     # -- public API -----------------------------------------------------------
@@ -270,13 +295,16 @@ def get():
 
 def configure(path, meta: Optional[Dict[str, Any]] = None,
               run_id: Optional[str] = None,
-              flush_every: int = 256) -> Recorder:
-    """Install a JSONL recorder as the ambient sink (closing any prior)."""
+              flush_every: int = 256,
+              max_bytes: Optional[int] = None) -> Recorder:
+    """Install a JSONL recorder as the ambient sink (closing any prior).
+    ``max_bytes`` rotates the log to ``<path>.1`` once it crosses the
+    cap, bounding long runs to ~2x max_bytes on disk."""
     global _active
     if _active is not None:
         _active.close()
     _active = Recorder(path, run_id=run_id, meta=meta,
-                       flush_every=flush_every)
+                       flush_every=flush_every, max_bytes=max_bytes)
     return _active
 
 
@@ -289,9 +317,11 @@ def shutdown():
 
 
 @contextlib.contextmanager
-def enabled(path, meta: Optional[Dict[str, Any]] = None):
+def enabled(path, meta: Optional[Dict[str, Any]] = None,
+            flush_every: int = 256, max_bytes: Optional[int] = None):
     """Scoped telemetry (tests / short-lived drivers)."""
-    rec = configure(path, meta=meta)
+    rec = configure(path, meta=meta, flush_every=flush_every,
+                    max_bytes=max_bytes)
     try:
         yield rec
     finally:

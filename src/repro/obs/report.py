@@ -9,12 +9,29 @@ Sections:
   * spans             — per-stage latency attribution: count, mean,
                         p50, p95, max, total wall seconds per span name
   * links             — per-client/per-link byte accounting (raw vs
-                        wire bytes, quant state, per-step aggregate)
+                        wire bytes, quant state, per-step aggregate;
+                        when the run recorded a runtime participation
+                        mask, the aggregate is also shown weighted by
+                        it — the wire traffic a dropout/straggler run
+                        actually moved)
+  * faults            — ``fault/*`` events from a chaos run, grouped by
+                        kind with the steps they fired at. Injections
+                        (``fault/nan_batch``, ``fault/producer_crash``,
+                        ...) read next to their recoveries
+                        (``fault/step_skipped``,
+                        ``fault/prefetch_restart``,
+                        ``fault/ckpt_retry``) — a healthy chaos run
+                        pairs every injection with a recovery and the
+                        span/link tables look like a clean run's
   * counters / gauges — final totals and last-seen gauge values
   * histograms        — recorder-side aggregations (step wall time)
   * events            — error events in full, info events counted
   * bench             — optional BENCH_pipeline.json steps/sec
                         trajectory next to the measured spans
+
+Rotated logs (``obs.configure(..., max_bytes=...)``) keep the overflow
+in ``<path>.1``; render it separately — each file re-opens with the
+run's meta record, so both halves are self-describing.
 """
 from __future__ import annotations
 
@@ -141,8 +158,30 @@ def render(records: List[Dict[str, Any]],
                                "wire/client", "format", "quant", "cadence"])
         lines.append(f"per-step wire total (all clients): "
                      f"{_fmt_bytes(step_total)}")
+        part = [r for r in records if r.get("kind") == "gauge"
+                and r.get("name") == "comm/participation_frac"]
+        if part:
+            frac = float(part[-1]["value"])
+            lines.append(
+                f"per-step wire total x participation "
+                f"(mask-aware, frac={frac:.3f}): "
+                f"{_fmt_bytes(step_total * frac)}")
     else:
         lines.append("(none)")
+
+    fault_events: Dict[str, List] = {}
+    for r in records:
+        if (r.get("kind") == "event"
+                and str(r.get("name", "")).startswith("fault/")):
+            fault_events.setdefault(r["name"], []).append(
+                r.get("fields", {}).get("step"))
+    if fault_events:
+        lines += ["", "== faults (injections & recoveries) =="]
+        for name, steps in sorted(fault_events.items()):
+            shown = ",".join(str(s) for s in steps[:12] if s is not None)
+            more = f" (+{len(steps) - 12} more)" if len(steps) > 12 else ""
+            lines.append(f"{name}: x{len(steps)}"
+                         + (f" @ steps {shown}{more}" if shown else ""))
 
     counters: Dict[str, Any] = {}
     gauges: Dict[str, Any] = {}

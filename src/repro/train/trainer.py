@@ -68,6 +68,14 @@ class MetricsRing:
         jax.block_until_ready(m)
         return dict({k: np.asarray(v) for k, v in m.items()}, step=step)
 
+    def entries_after(self, start_step: int):
+        """Live (step, metrics) entries with step > start_step, ascending.
+        Metrics stay on device — touching a value is what blocks, so
+        callers that only inspect dict keys stay sync-free."""
+        live = [s for s in self._slots
+                if s is not None and s[0] > start_step]
+        return sorted(live, key=lambda s: s[0])
+
 
 @dataclasses.dataclass
 class TrainerConfig:
@@ -103,6 +111,8 @@ class Trainer:
         self.metrics_history: list = []
         self.ring = MetricsRing(config.metrics_ring)
         self.step_times: list = []      # host dispatch time per step (s)
+        self.skipped_steps: list = []   # non-finite guard skips (fault mode)
+        self._skip_scan_from = 0        # ring high-water mark for the scan
         self._profile = ProfileWindow(config.profile_dir,
                                       config.profile_start,
                                       config.profile_steps)
@@ -141,9 +151,28 @@ class Trainer:
 
     # -- loop ----------------------------------------------------------------
 
+    def _drain_skips(self):
+        """Fault mode only: surface non-finite-guard skips at the same
+        boundaries as the metrics readback. When the step is unguarded
+        ("skipped" never appears in metrics) this touches no device
+        value — the sync pattern of a clean run is unchanged. Entries
+        older than the ring evict unseen; chaos runs keep log_every
+        below the ring size (asserted nowhere, documented here)."""
+        for step, m in self.ring.entries_after(self._skip_scan_from):
+            self._skip_scan_from = max(self._skip_scan_from, step)
+            if "skipped" not in m:
+                continue
+            if float(np.asarray(m["skipped"])) >= 0.5:
+                # ring entries are pushed at i+1; report the batch/step
+                # index i that was skipped (matches the injection event)
+                self.skipped_steps.append(step - 1)
+                self.obs.event("fault/step_skipped", step=step - 1)
+                self.obs.counter("fault/steps_skipped")
+
     def _log_latest(self, total: int, t0: float):
         with self.obs.span("metrics/readback"):
             m = self.ring.read_latest()      # the only mid-loop device sync
+        self._drain_skips()
         loss = float(m["loss"])
         step = int(m["step"])
         self.metrics_history.append({"step": step, "loss": loss})
@@ -163,6 +192,7 @@ class Trainer:
         total = steps if steps is not None else self.cfg.total_steps
         t0 = time.perf_counter()
         start = int(self.state["step"])
+        self._skip_scan_from = max(self._skip_scan_from, start)
         self.obs.event("trainer/run_start", start_step=start,
                        total_steps=total)
         host_s = 0.0                    # time spent assembling/placing input
@@ -190,6 +220,7 @@ class Trainer:
         # final readback reflects the LAST step, not the last logged step
         with self.obs.span("metrics/readback"):
             final = self.ring.read_latest()
+        self._drain_skips()
         if final is not None and (not self.metrics_history or
                                   self.metrics_history[-1]["step"]
                                   < int(final["step"])):
@@ -205,6 +236,7 @@ class Trainer:
                   "history": self.metrics_history,
                   "steps_per_sec": (ran / wall) if wall > 0 and ran else 0.0,
                   "host_stall_frac": (host_s / wall) if wall > 0 else 0.0,
+                  "skipped_steps": list(self.skipped_steps),
                   "wall_s": wall}
         # close out the run log: link accounting captured at trace time,
         # histogram aggregations, and the run summary

@@ -23,6 +23,14 @@ def pytest_configure(config):
         "markers",
         "slow: large-shape / long-running cases excluded from tier-1 "
         "(`pytest -m 'not slow'`); the full tier runs them in CI")
+    # chaos: the fault-injection/recovery suite (`pytest -m chaos`), run
+    # by the dedicated CI chaos job. Heavy chaos cases carry `slow` too,
+    # keeping them out of tier-1; the slow CI job deselects `chaos` so
+    # they run exactly once.
+    config.addinivalue_line(
+        "markers",
+        "chaos: fault-injection & recovery cases (`pytest -m chaos`); "
+        "heavy ones also carry `slow` to stay out of tier-1")
 
 
 def _nodeid_seed(nodeid: str) -> int:

@@ -1,0 +1,389 @@
+"""Chaos suite: fault injection (`repro.faults`) and the recovery paths.
+
+Every test here carries the `chaos` marker (the dedicated CI chaos job
+runs `pytest -m chaos`); the heavy end-to-end cases also carry `slow` so
+tier-1 stays fast. The invariants under test:
+
+  * determinism — a FaultPlan is a pure value; sampling, spec parsing,
+    and JSON roundtrips are exact.
+  * recovery determinism — a producer crash mid-run restarts the
+    prefetcher and yields the bitwise-identical batch stream of an
+    uninjected run; a NaN-poisoned step is skipped with params and Adam
+    moments bitwise untouched; a failed checkpoint write retries to a
+    resumable checkpoint.
+  * restart invariance under faults — a faulty 30-step run straight
+    equals the same plan run 15 steps + checkpoint + rebuild + resume.
+  * observability — every injection and every recovery lands as a
+    structured `fault/*` event in the run log.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import faults, obs
+from repro.checkpoint import AsyncCheckpointer, latest_step
+from repro.configs import MPSLConfig, RunConfig, SHAPES, get_config, reduced
+from repro.core import mpsl, split
+from repro.data import PrefetchLoader
+from repro.faults import FaultEvent, FaultPlan, InjectedFault
+from repro.launch.train import make_lm_loader
+from repro.optim import schedules
+from repro.train import Trainer, TrainerConfig
+
+pytestmark = pytest.mark.chaos
+
+
+def _read_events(path):
+    with open(path) as f:
+        recs = [json.loads(line) for line in f]
+    return [r for r in recs if r.get("kind") == "event"]
+
+
+class StepLoader:
+    """Pure step-indexed loader: batch(k) is a function of k alone."""
+
+    def batch(self, step):
+        rng = np.random.default_rng(1000 + step)
+        return {"x": rng.standard_normal(8).astype(np.float32)}
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: determinism, parsing, serialization
+
+
+def test_plan_spec_and_json_roundtrip(tmp_path):
+    spec = ("producer_crash@7,straggler@11:1:0.2,nan_batch@13,"
+            "ckpt_fail@20,deadline=0.05,seed=7")
+    plan = FaultPlan.from_spec(spec)
+    assert plan.kinds_present() == ["ckpt_fail", "nan_batch",
+                                    "producer_crash", "straggler"]
+    assert plan.seed == 7 and plan.deadline_s == 0.05
+    (sg,) = plan.at("straggler", 11)
+    assert sg.client == 1 and sg.delay_s == 0.2
+    assert plan.at("nan_batch", 12) == []
+
+    # JSON roundtrip through a file is exact (frozen dataclass equality)
+    p = tmp_path / "plan.json"
+    p.write_text(plan.to_json())
+    assert FaultPlan.from_spec(str(p)) == plan
+
+    with pytest.raises(ValueError):
+        FaultPlan.from_spec("nonsense-token")
+    with pytest.raises(ValueError):
+        FaultPlan.from_spec("not_a_kind@3")
+
+
+def test_plan_sampling_is_seed_deterministic():
+    kw = dict(n_clients=4, p_producer_crash=0.1, p_straggler=0.2,
+              p_nan_batch=0.1, p_ckpt_fail=0.05)
+    a = FaultPlan.sample(5, 60, **kw)
+    b = FaultPlan.sample(5, 60, **kw)
+    c = FaultPlan.sample(6, 60, **kw)
+    assert a == b
+    assert a != c
+    assert len(a.events) > 0
+    assert all(e.step < 60 for e in a.events)
+    # stragglers carry a client target and a latency
+    for e in a.events:
+        if e.kind == "straggler":
+            assert e.client is not None and 0 <= e.client < 4
+            assert e.delay_s > 0
+
+
+def test_no_plan_is_a_noop():
+    faults.deactivate()
+    inj = faults.get()
+    assert inj.enabled is False
+    batch = {"mask": np.ones(3, np.float32)}
+    assert inj.batch_hook(0, batch) is batch     # same object, untouched
+    inj.producer(0)
+    inj.ckpt_write(0)
+
+
+# ---------------------------------------------------------------------------
+# Producer crash -> bounded retry -> bitwise-identical stream
+
+
+def test_producer_crash_recovers_bitwise_stream(tmp_path):
+    reference = [StepLoader().batch(i) for i in range(6)]
+    log = tmp_path / "log.jsonl"
+    with obs.enabled(str(log)):
+        with faults.injected(FaultPlan.from_spec("producer_crash@3")) as inj:
+            pf = PrefetchLoader(StepLoader(), depth=2, retry_backoff_s=0.0)
+            got = [pf.batch(i) for i in range(6)]
+            pf.close()
+    assert pf.retries == 1
+    assert [e.kind for e in inj.fired_events] == ["producer_crash"]
+    for r, g in zip(reference, got):
+        np.testing.assert_array_equal(r["x"], g["x"])
+    names = {e["name"] for e in _read_events(log)}
+    assert "fault/producer_crash" in names       # the injection
+    assert "fault/prefetch_restart" in names     # the recovery
+
+
+def test_producer_crash_retry_exhaustion_raises():
+    # three scheduled crashes at one step, budget of one retry: the
+    # injector fires one crash per attempt, so the budget exhausts
+    plan = FaultPlan.from_spec(
+        "producer_crash@2,producer_crash@2,producer_crash@2")
+    with faults.injected(plan):
+        pf = PrefetchLoader(StepLoader(), depth=2, max_retries=1,
+                            retry_backoff_s=0.0)
+        assert pf.batch(0) is not None
+        assert pf.batch(1) is not None
+        with pytest.raises(InjectedFault):
+            pf.batch(2)
+        pf.close()
+
+
+# ---------------------------------------------------------------------------
+# Straggler deadline cutoff / client drop / NaN poison (hook level)
+
+
+def test_straggler_cutoff_and_drop_update_mask():
+    plan = FaultPlan.from_spec(
+        "straggler@5:2:0.2,client_drop@5:0,deadline=0.05")
+    batch = {"mask": np.ones(4, np.float32),
+             "tokens": np.arange(4, dtype=np.int32)}
+    with faults.injected(plan):
+        inj = faults.get()
+        clean = inj.batch_hook(4, dict(batch))
+        np.testing.assert_array_equal(clean["mask"], np.ones(4))
+        out = inj.batch_hook(5, dict(batch))
+        # events fire once: a replayed assembly of the same step (e.g.
+        # after a producer restart) does not re-inject
+        again = inj.batch_hook(5, dict(batch))
+    np.testing.assert_array_equal(out["mask"], [0.0, 1.0, 0.0, 1.0])
+    np.testing.assert_array_equal(again["mask"], np.ones(4))
+    # non-mask fields pass through bitwise
+    np.testing.assert_array_equal(out["tokens"], batch["tokens"])
+
+
+def test_sub_deadline_straggler_keeps_participation():
+    plan = FaultPlan.from_spec("straggler@3:1:0.01,deadline=0.05")
+    batch = {"mask": np.ones(2, np.float32)}
+    with faults.injected(plan):
+        out = faults.get().batch_hook(3, dict(batch))
+    np.testing.assert_array_equal(out["mask"], np.ones(2))
+
+
+def test_all_clients_cut_keeps_one():
+    plan = FaultPlan.from_spec("client_drop@3:0,client_drop@3:1")
+    batch = {"mask": np.ones(2, np.float32)}
+    with faults.injected(plan):
+        out = faults.get().batch_hook(3, dict(batch))
+    # the server can't renormalize an empty round: lowest live client kept
+    np.testing.assert_array_equal(out["mask"], [1.0, 0.0])
+
+
+def test_nan_poison_hits_first_float_field():
+    plan = FaultPlan.from_spec("nan_batch@1")
+    batch = {"tokens": np.arange(6, dtype=np.int32),
+             "mask": np.ones(3, np.float32)}
+    with faults.injected(plan):
+        out = faults.get().batch_hook(1, dict(batch))
+    assert np.isnan(out["mask"].flat[0])
+    assert np.isfinite(out["mask"].flat[1:]).all()
+    np.testing.assert_array_equal(out["tokens"], batch["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint-write failure -> retry -> resumable checkpoint
+
+
+def test_ckpt_fail_retries_to_resumable_checkpoint(tmp_path):
+    state = {"w": np.arange(4, dtype=np.float32)}
+    log = tmp_path / "log.jsonl"
+    with obs.enabled(str(log)):
+        with faults.injected(FaultPlan.from_spec("ckpt_fail@5")):
+            ck = AsyncCheckpointer(str(tmp_path / "ck"), retries=2,
+                                   backoff_s=0.0)
+            ck.save(5, state)
+            ck.wait()
+    assert ck.last_error is None
+    assert latest_step(str(tmp_path / "ck")) == 5
+    names = {e["name"] for e in _read_events(log)}
+    assert "fault/ckpt_fail" in names
+    assert "fault/ckpt_retry" in names
+
+
+def test_ckpt_fail_exhaustion_surfaces_error(tmp_path):
+    state = {"w": np.zeros(2, np.float32)}
+    plan = FaultPlan.from_spec("ckpt_fail@7,ckpt_fail@7,ckpt_fail@7")
+    with faults.injected(plan):
+        ck = AsyncCheckpointer(str(tmp_path / "ck"), retries=1,
+                               backoff_s=0.0)
+        ck.save(7, state)
+        with pytest.raises(InjectedFault):
+            ck.wait()
+    assert latest_step(str(tmp_path / "ck")) is None
+
+
+# ---------------------------------------------------------------------------
+# Guarded step + end-to-end chaos runs (slow: build the reduced LM)
+
+_STEP_CACHE = {}
+
+
+def _chaos_setup(ckpt_dir, steps=30, prefetch=True):
+    cfg = reduced(get_config("minitron-4b"))
+    mp = MPSLConfig(n_clients=4, trainable_blocks=1, head_adapter_rank=4)
+    run = RunConfig(model=cfg, shape=SHAPES["train_4k"], mpsl=mp,
+                    compute_dtype="float32", learning_rate=1e-3)
+    params, frozen, _ = split.init_mpsl_lm(jax.random.PRNGKey(0), cfg, run)
+    state = mpsl.place_state(mpsl.init_state(params, frozen))
+    if "fn" not in _STEP_CACHE:
+        loss_fn = mpsl.make_lm_loss(cfg, run)
+        _STEP_CACHE["fn"] = mpsl.jit_train_step(
+            mpsl.make_train_step(loss_fn, run, schedules.constant(1e-3),
+                                 guard_nonfinite=True),
+            donate=True)
+    inner = make_lm_loader(cfg, 4, 2, 24, seed=0)
+    loader = (PrefetchLoader(inner, depth=2, retry_backoff_s=0.0)
+              if prefetch else inner)
+    tc = TrainerConfig(total_steps=steps, ckpt_every=10,
+                       ckpt_dir=str(ckpt_dir) if ckpt_dir else None,
+                       log_every=10)
+    return state, _STEP_CACHE["fn"], loader, tc
+
+
+def _assert_trees_equal(a, b):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.mark.slow
+def test_nonfinite_guard_skip_leaves_state_untouched(tmp_path):
+    """Satellite contract: an injected NaN batch skips the update with
+    params AND Adam moments bitwise untouched, while the step counter
+    still advances (keeping the loader/rng schedule aligned)."""
+    # synchronous loader: a prefetcher would speculatively assemble
+    # batch 1 before the plan activates (chaos runs activate the plan
+    # before building the pipeline, as launch/train.py does)
+    state, step_fn, loader, _ = _chaos_setup(None, steps=2,
+                                             prefetch=False)
+    b0 = {k: jnp.asarray(v) for k, v in loader.batch(0).items()}
+    state, m0 = step_fn(state, b0)
+    assert float(m0["skipped"]) == 0.0
+    assert np.isfinite(float(m0["loss"]))
+
+    # snapshot to host BEFORE the donated step consumes the buffers
+    params_before = jax.tree_util.tree_map(
+        lambda x: np.asarray(x).copy(), state["params"])
+    opt_before = jax.tree_util.tree_map(
+        lambda x: np.asarray(x).copy(), state["opt"])
+    step_before = int(state["step"])
+
+    with faults.injected(FaultPlan.from_spec("nan_batch@1")):
+        b1 = loader.batch(1)
+    assert np.isnan(np.asarray(b1["mask"]).flat[0])
+    state, m1 = step_fn(state, {k: jnp.asarray(v) for k, v in b1.items()})
+    assert float(m1["skipped"]) == 1.0
+    assert float(m1["participating"]) == 0.0
+    assert int(state["step"]) == step_before + 1
+    _assert_trees_equal(params_before, state["params"])
+    _assert_trees_equal(opt_before, state["opt"])
+
+
+PLAN_FULL = ("producer_crash@7,straggler@11:1:0.2,nan_batch@13,"
+             "ckpt_fail@20,deadline=0.05")
+
+
+@pytest.mark.slow
+def test_chaos_end_to_end_30_steps(tmp_path):
+    """Acceptance case: a 30-step run under a seeded plan (producer
+    crash, straggler past deadline, NaN batch, one ckpt-write failure)
+    completes; every injection and recovery lands as a `fault/*` event;
+    and the final state matches the restart-invariance contract: the
+    same plan run 15 steps + checkpoint + rebuild + resume lands on
+    bitwise-identical parameters and optimizer state."""
+    plan = FaultPlan.from_spec(PLAN_FULL)
+    log_dir = os.environ.get("OBS_LOG_DIR")
+    if log_dir:
+        os.makedirs(log_dir, exist_ok=True)
+        log_path = os.path.join(log_dir, "chaos_e2e.jsonl")
+    else:
+        log_path = str(tmp_path / "chaos_e2e.jsonl")
+
+    # -- straight 30-step run, with the run log enabled
+    with obs.enabled(log_path, meta={"test": "chaos_e2e",
+                                     "fault_plan": PLAN_FULL}):
+        with faults.injected(plan) as inj:
+            state, fn, loader, tc = _chaos_setup(tmp_path / "a")
+            t = Trainer(fn, state, loader, tc, log_fn=lambda s: None)
+            res = t.run()
+            loader.close()
+    straight = t.state
+
+    assert res["final_loss"] is not None and np.isfinite(res["final_loss"])
+    assert res["skipped_steps"] == [13]
+    assert loader.retries == 1
+    assert {e.kind for e in inj.fired_events} == {
+        "producer_crash", "straggler", "nan_batch", "ckpt_fail"}
+
+    names = [e["name"] for e in _read_events(log_path)]
+    for required in ("fault/plan_activated",
+                     "fault/producer_crash", "fault/prefetch_restart",
+                     "fault/straggler_cutoff",
+                     "fault/nan_batch", "fault/step_skipped",
+                     "fault/ckpt_fail", "fault/ckpt_retry"):
+        assert required in names, f"missing {required} in run log"
+    skip = next(e for e in _read_events(log_path)
+                if e["name"] == "fault/step_skipped")
+    assert skip["fields"]["step"] == 13
+
+    # the report renderer groups the fault events into its own section
+    from repro.obs import report
+    text = report.render(report.load_records(log_path))
+    assert "faults" in text and "fault/nan_batch" in text
+
+    # -- same plan: 15 steps, checkpoint, rebuild from scratch, resume
+    with faults.injected(plan):
+        state, fn, loader, tc = _chaos_setup(tmp_path / "b")
+        t1 = Trainer(fn, state, loader, tc, log_fn=lambda s: None)
+        t1.run(15)
+        loader.close()
+    assert t1.skipped_steps == [13]
+    with faults.injected(plan):
+        state, fn, loader2, tc = _chaos_setup(tmp_path / "b")
+        t2 = Trainer(fn, state, loader2, tc, log_fn=lambda s: None)
+        assert int(t2.state["step"]) == 15
+        t2.run(30)
+        loader2.close()
+
+    _assert_trees_equal(straight["params"], t2.state["params"])
+    _assert_trees_equal(straight["opt"], t2.state["opt"])
+    assert int(straight["step"]) == int(t2.state["step"]) == 30
+
+
+@pytest.mark.slow
+def test_recovered_faults_are_invisible(tmp_path):
+    """Faults whose recovery is exact (producer crash, ckpt-write
+    failure) leave the training trajectory bitwise identical to an
+    uninjected run — the retries reproduce exactly the work the fault
+    interrupted."""
+    plan = FaultPlan.from_spec("producer_crash@4,ckpt_fail@10")
+    with faults.injected(plan) as inj:
+        state, fn, loader, tc = _chaos_setup(tmp_path / "ck", steps=12)
+        tc.ckpt_every = 5
+        t1 = Trainer(fn, state, loader, tc, log_fn=lambda s: None)
+        t1.run()
+        loader.close()
+    assert {e.kind for e in inj.fired_events} == {"producer_crash",
+                                                  "ckpt_fail"}
+    assert t1.skipped_steps == []
+
+    state, fn, loader2, tc2 = _chaos_setup(None, steps=12)
+    t2 = Trainer(fn, state, loader2, tc2, log_fn=lambda s: None)
+    t2.run()
+    loader2.close()
+
+    _assert_trees_equal(t1.state["params"], t2.state["params"])
+    _assert_trees_equal(t1.state["opt"], t2.state["opt"])

@@ -289,3 +289,134 @@ def test_trainer_obs_end_to_end(tmp_path, monkeypatch):
     rendered = report.render(recs)
     assert "step/dispatch" in rendered
     assert "uplink.activations" in rendered
+
+
+# ---------------------------------------------------------------------------
+# Recorder rotation (bounded chaos/soak run logs)
+
+
+def test_recorder_rotation_bounds_log_size(tmp_path):
+    path = tmp_path / "log.jsonl"
+    with obs.enabled(str(path), meta={"who": "rot"}, flush_every=1,
+                     max_bytes=1500) as rec:
+        for i in range(200):
+            rec.event("spam", i=i)
+    assert rec.rotations >= 1
+    rotated = tmp_path / "log.jsonl.1"
+    assert rotated.exists()
+    # total footprint bounded by ~2x the cap (one flush of slack each)
+    assert path.stat().st_size <= 2 * 1500
+    assert rotated.stat().st_size <= 2 * 1500
+
+    head = [json.loads(l) for l in path.read_text().splitlines()]
+    tail = [json.loads(l) for l in rotated.read_text().splitlines()]
+    # the live file re-opens self-describing: meta record first, carrying
+    # the rotation count and the original run fields
+    assert head[0]["kind"] == "meta"
+    assert head[0]["fields"] == {"who": "rot"}
+    assert head[0]["rotation"] >= 1
+    # the rotation boundary loses nothing: rotated + live cover a
+    # contiguous suffix of the stream, ending at the newest event
+    seen = [r["fields"]["i"] for r in tail + head
+            if r.get("kind") == "event" and r["name"] == "spam"]
+    assert seen == list(range(min(seen), 200))
+
+
+# ---------------------------------------------------------------------------
+# Mask-aware link accounting (runtime participation weighting)
+
+
+def test_mask_aware_link_accounting_matches_costs():
+    """The trace-time link records assume full participation; the
+    runtime mask weighting must agree with the core.costs analytic model
+    scaled by the recorded participation fraction."""
+    bn, seq = 2, 32
+    cfg, mp, shape, links = _trace_lm_links(False, bn=bn, seq=seq)
+    agg = comm.per_step_wire_bytes()
+    assert agg["participation_frac"] == 1.0      # nothing recorded yet
+    assert agg["total_masked"] == agg["total"]
+
+    # runtime mask: one of two clients cut on half the steps; replays of
+    # a step (speculative re-assembly, restart) are idempotent
+    comm.note_participation(0, 2.0, 2)
+    comm.note_participation(1, 1.0, 2)
+    comm.note_participation(1, 1.0, 2)
+    ps = comm.participation_summary()
+    assert ps["steps"] == 2
+    assert ps["avg_frac"] == 0.75 and ps["min_frac"] == 0.5
+
+    agg = comm.per_step_wire_bytes()
+    assert agg["total_masked"] == int(round(agg["total"] * 0.75))
+    # cross-check against the analytic per-client cost (uncompressed ->
+    # exact): total = per-sample analytic * Bn * N, masked = frac * total
+    analytic = costs.mpsl_lm_client_cost(
+        cfg, mp, shape, compressed=False).comm_mb_per_epoch * 1e6
+    assert agg["total"] == pytest.approx(analytic * bn * mp.n_clients)
+    assert agg["total_masked"] == pytest.approx(
+        0.75 * analytic * bn * mp.n_clients, abs=1)
+
+    # the run-log mirror emits the participation gauges
+    class _Cap:
+        def __init__(self):
+            self.gauges = {}
+
+        def link(self, rec):
+            pass
+
+        def gauge(self, name, value, **fields):
+            self.gauges[name] = (value, fields)
+
+    cap = _Cap()
+    comm.emit_snapshot(cap)
+    val, fields = cap.gauges["comm/participation_frac"]
+    assert val == 0.75 and fields["steps"] == 2
+    assert cap.gauges["comm/per_step_wire_bytes_masked"][0] == agg[
+        "total_masked"]
+    comm.reset()
+
+
+# ---------------------------------------------------------------------------
+# Per-runner-class regression baselines
+
+
+def test_regression_baseline_class_resolution(tmp_path):
+    from benchmarks.regression_check import main, resolve_baseline
+
+    base = tmp_path / "BENCH_pipeline.json"
+    base.write_text(json.dumps({"entries": [
+        {"cell": "a", "variant": "overlap", "steps_per_sec": 10.0}]}))
+    # class file missing -> fall back to the class-less baseline
+    path, found = resolve_baseline(str(base), "gha-ubuntu")
+    assert path == str(base) and not found
+    cls = tmp_path / "BENCH_pipeline.gha-ubuntu.json"
+    cls.write_text(json.dumps({"entries": [
+        {"cell": "a", "variant": "overlap", "steps_per_sec": 4.0}]}))
+    path, found = resolve_baseline(str(base), "gha-ubuntu")
+    assert path == str(cls) and found
+    assert resolve_baseline(str(base), None) == (str(base), True)
+
+    # the gate resolves the class baseline: 4.9 sps passes vs the
+    # class's 4.0 at 0.5, but fails vs the class-less 10.0
+    bench = tmp_path / "new.json"
+    bench.write_text(json.dumps({"entries": [
+        {"cell": "a", "variant": "overlap", "steps_per_sec": 4.9}]}))
+    argv = ["--bench", str(bench), "--baseline", str(base),
+            "--baseline-class", "gha-ubuntu", "--min-ratio", "0.5"]
+    assert main(argv) == 0
+    assert main(["--bench", str(bench), "--baseline", str(base),
+                 "--min-ratio", "0.5"]) == 1
+    # --update with a class rewrites the class file, not the shared one
+    assert main(["--bench", str(bench), "--baseline", str(base),
+                 "--baseline-class", "gha-ubuntu", "--update"]) == 0
+    assert json.loads(cls.read_text()) == json.loads(bench.read_text())
+    assert json.loads(base.read_text())["entries"][0][
+        "steps_per_sec"] == 10.0
+
+
+def test_committed_runner_class_baseline_exists():
+    # ci.yml gates the full job with --baseline-class gha-ubuntu; the
+    # class baseline it resolves must stay committed
+    root = pathlib.Path(__file__).resolve().parents[1]
+    doc = json.loads((root / "BENCH_pipeline.gha-ubuntu.json").read_text())
+    assert doc["entries"]
+    assert {"cell", "variant", "steps_per_sec"} <= set(doc["entries"][0])
